@@ -1,0 +1,75 @@
+"""Shared benchmark helpers: scaled configs, rate calibration, CSV rows.
+
+All KV benchmarks run at data scale λ = SCALE/64MiB with the matched
+device model (DeviceModel.scaled) — see DESIGN.md's hardware-adaptation
+table.  "SST size" knobs are expressed in *paper-equivalent* MB (8 MB
+paper SST ↦ SCALE/8 bytes here).
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+import numpy as np  # noqa: E402
+
+from repro.bench_kv import (make_load_a, make_run_a, make_run_b, make_run_c,  # noqa: E402
+                            make_run_d, run_ycsb, sustainable_throughput)
+from repro.core import DeviceModel, LSMConfig, Policy  # noqa: E402
+
+SCALE = 1 << 18           # "64 MB" ≙ 256 KiB;  λ = 1/256
+PAPER_MB = 64             # what SCALE corresponds to
+
+
+def sst_bytes(paper_mb: float) -> int:
+    """Paper-equivalent SST size -> scaled bytes."""
+    return max(4096, int(SCALE * paper_mb / PAPER_MB))
+
+
+def vlsm_cfg(sst_mb: float = 8, phi: int = 32) -> LSMConfig:
+    sst = sst_bytes(sst_mb)
+    return LSMConfig(memtable_size=sst, sst_size=sst, l0_max_ssts=4,
+                     policy=Policy.VLSM, growth_factor=8, phi=phi)
+
+
+def rocksdb_cfg(sst_mb: float = 64, debt: float = 0.25) -> LSMConfig:
+    sst = sst_bytes(sst_mb)
+    return LSMConfig(memtable_size=sst, sst_size=sst, l0_max_ssts=4,
+                     policy=Policy.ROCKSDB, debt_factor=debt, growth_factor=8)
+
+
+def rocksdb_io_cfg(sst_mb: float = 64) -> LSMConfig:
+    return rocksdb_cfg(sst_mb).with_(policy=Policy.ROCKSDB_IO, debt_factor=0.0)
+
+
+def adoc_cfg(sst_mb: float = 64) -> LSMConfig:
+    return rocksdb_cfg(sst_mb).with_(policy=Policy.ADOC, debt_factor=1.0)
+
+
+def lsmi_cfg(sst_mb: float = 8) -> LSMConfig:
+    sst = sst_bytes(sst_mb)
+    return LSMConfig(memtable_size=sst, sst_size=sst, l0_max_ssts=4,
+                     policy=Policy.LSMI, growth_factor=8)
+
+
+_SUS_CACHE: dict = {}
+
+
+def sus(cfg: LSMConfig, n: int = 50_000) -> float:
+    key = (cfg.policy, cfg.sst_size, cfg.phi, cfg.debt_factor, n)
+    if key not in _SUS_CACHE:
+        _SUS_CACHE[key] = sustainable_throughput(cfg, make_load_a(n),
+                                                 scale=SCALE)
+    return _SUS_CACHE[key]
+
+
+def load_at_fraction(cfg: LSMConfig, frac: float = 0.6, n: int = 50_000):
+    return run_ycsb(cfg, make_load_a(n), rate=frac * sus(cfg, n), scale=SCALE)
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    print(f"{name},{value},{derived}", flush=True)

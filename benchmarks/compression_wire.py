@@ -1,0 +1,66 @@
+"""Wire-bytes benchmark for int8 gradient compression (dry-run method
+applied to a single collective): lower an fp32 psum and the int8
+compressed_psum over a 4-device 'pod' axis and diff the parsed collective
+bytes from the compiled HLO."""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from .common import emit
+
+_CODE = """
+import jax, jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+import sys
+sys.path.insert(0, %r)
+from repro.distributed.compression import compressed_psum
+from repro.launch.dryrun import collective_bytes
+
+mesh = jax.make_mesh((4,), ("pod",))
+x = jnp.zeros((1024, 1024), jnp.float32)          # 4 MiB payload
+
+def plain(x):
+    return jax.lax.psum(x, "pod")
+
+def packed(x):
+    return compressed_psum(x, "pod")
+
+for name, fn in (("fp32", plain), ("int8", packed)):
+    f = jax.jit(shard_map(fn, mesh=mesh, in_specs=(P(),), out_specs=P(),
+                          check_rep=False))
+    txt = f.lower(x).compile().as_text()
+    c = collective_bytes(txt)
+    wire = sum(v for k, v in c.items() if k not in ("_count", "per_op_counts"))
+    print(f"{name},{int(wire)}")
+"""
+
+
+def bench_wire() -> None:
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = src
+    out = subprocess.run([sys.executable, "-c",
+                          textwrap.dedent(_CODE % src)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    if out.returncode != 0:
+        emit("compression.error", 1, out.stderr.strip()[-200:])
+        return
+    vals = dict(line.split(",") for line in out.stdout.strip().splitlines())
+    fp32 = float(vals.get("fp32", 0))
+    int8 = float(vals.get("int8", 1))
+    emit("compression.fp32_wire_bytes", int(fp32), "psum of 4MiB fp32")
+    emit("compression.int8_wire_bytes", int(int8), "compressed_psum")
+    if int8 > 0:
+        emit("compression.wire_reduction_x", round(fp32 / int8, 2),
+             "cross-pod gradient traffic reduction")
+
+
+if __name__ == "__main__":
+    bench_wire()

@@ -1,0 +1,233 @@
+"""One function per paper figure/table (Figs 1-13, Table 1).
+
+Each returns a list of CSV rows and prints them via common.emit.  Run all
+with ``python -m benchmarks.run``; individual figures:
+``python -m benchmarks.fig_benchmarks fig08``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (SCALE, adoc_cfg, emit, load_at_fraction, lsmi_cfg,
+                     rocksdb_cfg, rocksdb_io_cfg, sst_bytes, sus, vlsm_cfg)
+from repro.bench_kv import (make_load_a, make_run_a, make_run_b, make_run_c,
+                            make_run_d, run_ycsb, zipf_keys)
+from repro.bench_kv.workloads import load_keys, pareto_keys
+from repro.core import LSMConfig
+
+
+# ---------------------------------------------------------------- Figure 1
+def fig01_stall_timeline(n=60_000):
+    """RocksDB throughput timeline + stall share under Load A (Fig 1a) and
+    P99 vs load (Fig 1b)."""
+    cfg = rocksdb_cfg()
+    r = load_at_fraction(cfg, 0.95, n)
+    centers, rate = r.sim.completions_timeline(bins=40)
+    stall_share = r.sim.stall_total / max(r.sim.makespan, 1e-9)
+    emit("fig01a.stall_share_pct", round(100 * stall_share, 1),
+         "share of runtime spent write-stalled (paper: ~40%)")
+    emit("fig01a.throughput_min_over_mean",
+         round(float(rate.min() / max(rate.mean(), 1e-9)), 3),
+         "dips to ~0 during stalls")
+    for frac in (0.4, 0.6, 0.8, 0.95):
+        rr = load_at_fraction(cfg, frac, n)
+        emit(f"fig01b.p99_ms@{int(frac*100)}pct_load",
+             round(rr.sim.p99 * 1e3, 1), "rocksdb P99 vs load")
+
+
+# ---------------------------------------------------------------- Figure 2
+def fig02_chains_rocksdb(n=50_000):
+    """RocksDB chain width/length vs SST size (Fig 2)."""
+    rows = []
+    for sst_mb in (64, 32, 16, 8):
+        cfg = rocksdb_io_cfg(sst_mb=64).with_(sst_size=sst_bytes(sst_mb))
+        r = load_at_fraction(cfg, 0.7, n)
+        st = r.sim.stats
+        emit(f"fig02.width_mb@sst{sst_mb}",
+             round(st.mean_chain_width / 1e6 * 256, 1),
+             "paper-equivalent MB (x256 descale)")
+        emit(f"fig02.length@sst{sst_mb}", round(st.mean_chain_length, 2), "")
+        rows.append((sst_mb, st.mean_chain_width, st.mean_chain_length))
+    return rows
+
+
+# ---------------------------------------------------------------- Figure 4
+def fig04_ioamp_notiering(n=50_000):
+    """(a) LSMi (no tiering, fixed SSTs): single-SST L0->L1 with L1=L0 size
+    explodes I/O amp as SSTs shrink; (b) levels grow with small SSTs."""
+    for sst_mb in (64, 8):
+        cfg = lsmi_cfg(sst_mb=sst_mb)
+        r = load_at_fraction(cfg, 0.5, n)
+        emit(f"fig04a.lsmi_ioamp@sst{sst_mb}", round(r.sim.stats.io_amp, 1),
+             "no-tiering naive: amp grows as SST shrinks")
+    v = load_at_fraction(vlsm_cfg(sst_mb=8), 0.5, n)
+    emit("fig04.vlsm_ioamp@sst8", round(v.sim.stats.io_amp, 1),
+         "vLSM: small SSTs + phi + vSSTs")
+
+
+# ---------------------------------------------------------------- Figure 7
+def fig07_stalls(n=60_000):
+    """Write stalls (left), max stall (middle), I/O amp (right), per
+    policy; vLSM across SST sizes (Fig 7)."""
+    systems = {
+        "rocksdb": rocksdb_cfg(), "rocksdb_io": rocksdb_io_cfg(),
+        "adoc": adoc_cfg(),
+        "vlsm_sst8": vlsm_cfg(8), "vlsm_sst16": vlsm_cfg(16),
+        "vlsm_sst32": vlsm_cfg(32), "vlsm_sst64": vlsm_cfg(64, phi=4),
+    }
+    out = {}
+    for name, cfg in systems.items():
+        r = load_at_fraction(cfg, 0.6, n)
+        out[name] = r
+        emit(f"fig07.stall_total_s.{name}", round(r.sim.stall_total, 3), "")
+        emit(f"fig07.stall_max_s.{name}", round(r.sim.stall_max, 3), "")
+        emit(f"fig07.io_amp.{name}", round(r.sim.stats.io_amp, 1), "")
+    red = 1 - out["vlsm_sst8"].sim.stall_total / max(
+        out["rocksdb_io"].sim.stall_total, 1e-9)
+    emit("fig07.vlsm_stall_reduction_pct", round(100 * red, 1),
+         "paper: up to 60%")
+    return out
+
+
+# ---------------------------------------------------------------- Figure 8
+def fig08_p99_vs_rate(n=50_000):
+    """P99 vs request rate for vLSM (8MB) and RocksDB (Fig 8)."""
+    cfg_v, cfg_r = vlsm_cfg(8), rocksdb_cfg()
+    for frac in (0.3, 0.5, 0.7, 0.9):
+        rv = load_at_fraction(cfg_v, frac, n)
+        rr = load_at_fraction(cfg_r, frac, n)
+        emit(f"fig08.p99_ms@{int(frac*100)}pct.vlsm",
+             round(rv.sim.p99 * 1e3, 2), "")
+        emit(f"fig08.p99_ms@{int(frac*100)}pct.rocksdb",
+             round(rr.sim.p99 * 1e3, 2), "")
+
+
+# ---------------------------------------------------------------- Figure 9
+def fig09_chains_vlsm(n=50_000):
+    """vLSM chain width/length vs SST size (Fig 9); paper: width down to
+    ~32 MB at 4 MB SSTs (=320x below RocksDB's 10 GB)."""
+    for sst_mb in (64, 32, 16, 8, 4):
+        # keep L2 at the RocksDB-equivalent 2 GB: phi = 2048 / (8*sst)
+        phi = max(4, int(2048 / (8 * sst_mb)))
+        cfg = vlsm_cfg(sst_mb, phi=phi)
+        r = load_at_fraction(cfg, 0.5, n)
+        st = r.sim.stats
+        emit(f"fig09.width_mb@sst{sst_mb}",
+             round(st.mean_chain_width / 1e6 * 256, 1),
+             "paper-equivalent MB")
+        emit(f"fig09.length@sst{sst_mb}", round(st.mean_chain_length, 2), "")
+
+
+# --------------------------------------------------------------- Figure 10
+def fig10_regions(n=80_000):
+    """Tail latency + throughput vs number of regions (Fig 10)."""
+    for regions in (1, 4, 16):
+        for name, cfg in (("vlsm", vlsm_cfg(8)), ("rocksdb", rocksdb_cfg())):
+            spec = make_load_a(n)
+            rate = 0.6 * sus(cfg, n)
+            r = run_ycsb(cfg, spec, rate=rate, n_regions=regions, scale=SCALE)
+            emit(f"fig10.p99_ms.{name}@r{regions}",
+                 round(r.sim.p99 * 1e3, 2), "")
+            emit(f"fig10.mean_chain_mb.{name}@r{regions}",
+                 round(r.sim.stats.mean_chain_width / 1e6 * 256, 1),
+                 "paper-equivalent MB")
+
+
+# --------------------------------------------------------------- Figure 11
+def fig11_cdf(n=60_000):
+    """Load-A latency CDF percentiles for RocksDB-IO vs vLSM (Fig 11)."""
+    rv = load_at_fraction(vlsm_cfg(8), 0.6, n)
+    rr = load_at_fraction(rocksdb_io_cfg(), 0.6, n)
+    for q in (50, 90, 99, 99.9):
+        emit(f"fig11.p{q}_ms.vlsm", round(rv.sim.pct(q) * 1e3, 3), "")
+        emit(f"fig11.p{q}_ms.rocksdb_io", round(rr.sim.pct(q) * 1e3, 3), "")
+
+
+# --------------------------------------------------------------- Figure 12
+def fig12_ycsb_sweep(n_load=50_000, n_run=30_000):
+    """All YCSB workloads: P99 (read/write), throughput, CPU proxy
+    (Figs 6 & 12)."""
+    pop = load_keys(n_load)
+    runs = {
+        "run_a": make_run_a(pop, n_run),
+        "run_b": make_run_b(pop, n_run),
+        "run_c": make_run_c(pop, n_run),
+        "run_d": make_run_d(pop, n_run),
+    }
+    for sys_name, cfg in (("vlsm8", vlsm_cfg(8)),
+                          ("rocksdb_io", rocksdb_io_cfg()),
+                          ("adoc", adoc_cfg())):
+        rate = 0.6 * sus(cfg, n_load)
+        for wname, spec in runs.items():
+            r = run_ycsb(cfg, spec, rate=rate, scale=SCALE, preload=pop)
+            emit(f"fig12.{wname}.p99_write_ms.{sys_name}",
+                 round(r.sim.pct(99, op=0) * 1e3, 3), "")
+            emit(f"fig12.{wname}.p99_read_ms.{sys_name}",
+                 round(r.sim.pct(99, op=1) * 1e3, 3), "")
+            emit(f"fig12.{wname}.cycles_op.{sys_name}",
+                 round(r.cycles_per_op(), 0), "CPU proxy")
+
+
+# --------------------------------------------------------------- Figure 13
+def fig13_phi_sensitivity(n=50_000):
+    """I/O amp + good-vSST fraction vs Φ (Fig 13 a,b) and key
+    distributions (Fig 13c)."""
+    for phi, sst_mb in ((4, 64), (8, 32), (16, 16), (32, 8), (64, 4)):
+        cfg = vlsm_cfg(sst_mb, phi=phi)
+        r = load_at_fraction(cfg, 0.5, n)
+        st = r.sim.stats
+        tot = max(1, st.vssts_good + st.vssts_poor)
+        emit(f"fig13a.io_amp@phi{phi}", round(st.io_amp, 1), "")
+        emit(f"fig13b.good_vsst_pct@phi{phi}",
+             round(100 * st.vssts_good / tot, 1),
+             "paper: ~90% @phi32, ~6% @phi64")
+    # distributions (13c): uniform vs zipfian vs pareto at phi=32
+    pop = load_keys(n)
+    cfg = vlsm_cfg(8)
+    rate = 0.5 * sus(cfg, n)
+    for dist, keys in (("uniform", pop),
+                       ("zipfian", zipf_keys(pop, n)),
+                       ("pareto", pareto_keys(pop, n))):
+        spec = make_load_a(n)
+        spec.keys = keys
+        r = run_ycsb(cfg, spec, rate=rate, scale=SCALE)
+        emit(f"fig13c.io_amp.{dist}", round(r.sim.stats.io_amp, 1),
+             "vLSM amp stable across key distributions")
+
+
+# ----------------------------------------------------------------- Table 1
+def tab01_sst_size(n=50_000):
+    """vLSM sensitivity to very small SSTs (Table 1): 8/4/2 MB."""
+    for sst_mb in (8, 4, 2):
+        cfg = vlsm_cfg(sst_mb, phi=32)
+        s = sus(cfg, n)
+        r = load_at_fraction(cfg, 0.6, n)
+        emit(f"tab01.p99_ms@sst{sst_mb}", round(r.sim.p99 * 1e3, 2), "")
+        emit(f"tab01.kops@sst{sst_mb}", round(s / 1e3, 2),
+             "sustainable throughput")
+        emit(f"tab01.kcycles_op@sst{sst_mb}",
+             round(r.cycles_per_op() / 1e3, 1),
+             "CPU proxy rises as SSTs shrink")
+
+
+ALL = {
+    "fig01": fig01_stall_timeline,
+    "fig02": fig02_chains_rocksdb,
+    "fig04": fig04_ioamp_notiering,
+    "fig07": fig07_stalls,
+    "fig08": fig08_p99_vs_rate,
+    "fig09": fig09_chains_vlsm,
+    "fig10": fig10_regions,
+    "fig11": fig11_cdf,
+    "fig12": fig12_ycsb_sweep,
+    "fig13": fig13_phi_sensitivity,
+    "tab01": tab01_sst_size,
+}
+
+
+if __name__ == "__main__":
+    import sys
+    names = sys.argv[1:] or list(ALL)
+    for n in names:
+        ALL[n]()

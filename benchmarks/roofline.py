@@ -1,0 +1,67 @@
+"""Assemble the §Roofline table from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--md]
+
+Per (arch × shape × mesh): the three roofline terms (seconds), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, per-device memory.
+v5e constants: 197 TF/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(variant: str = "baseline") -> list[dict]:
+    cells = []
+    for p in sorted(RESULTS.glob(f"*__{variant}.json")):
+        d = json.loads(p.read_text())
+        d["_file"] = p.name
+        cells.append(d)
+    return cells
+
+
+def fmt_row(d: dict) -> str:
+    if "skipped" in d:
+        a, s, m, _v = d["_file"][:-5].split("__")
+        return f"| {a} | {s} | {m} | SKIP | — | — | — | — | — |"
+    if "error" in d:
+        a, s, m, _v = d["_file"][:-5].split("__")
+        return f"| {a} | {s} | {m} | ERROR | — | — | — | — | — |"
+    r = d["roofline"]
+    mem = d.get("memory", {})
+    peak = mem.get("peak_bytes") or mem.get("temp_bytes") or 0
+    args = mem.get("argument_bytes", 0)
+    ratio = d.get("useful_flops_ratio", 0.0)
+    return ("| {arch} | {shape} | {mesh} | {tc:.3g} | {tm:.3g} | {tx:.3g} "
+            "| {dom} | {ratio:.2f} | {mem:.1f} |").format(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+        tc=r["t_compute_s"], tm=r["t_memory_s"], tx=r["t_collective_s"],
+        dom=r["dominant"], ratio=ratio, mem=(peak + args) / 2**30)
+
+
+def main():
+    cells = load_cells()
+    single = [c for c in cells if c.get("mesh", "16x16") == "16x16"
+              or "single" in c["_file"]]
+    print("| arch | shape | mesh | t_compute(s) | t_memory(s) | "
+          "t_collective(s) | dominant | useful_flops | mem/dev (GiB) |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        print(fmt_row(c))
+    ok = [c for c in cells if "roofline" in c]
+    if ok:
+        doms = {}
+        for c in ok:
+            doms[c["roofline"]["dominant"]] = doms.get(
+                c["roofline"]["dominant"], 0) + 1
+        print(f"\n# cells={len(cells)} compiled={len(ok)} dominant={doms}",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

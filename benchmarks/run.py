@@ -1,0 +1,67 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Prints ``name,value,derived`` CSV — one section per paper table/figure
+(Figs 1-13, Table 1), plus the distributed-layer wire benchmark.  Use
+``--full`` for the larger op counts, ``--only fig08,fig13`` to select.
+The roofline table is separate: ``python -m benchmarks.roofline``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated figure ids (default: all)")
+    ap.add_argument("--full", action="store_true",
+                    help="larger op counts (slower, smoother tails)")
+    args = ap.parse_args()
+
+    from . import fig_benchmarks as fb
+    names = args.only.split(",") if args.only else list(fb.ALL)
+    t0 = time.time()
+    print("name,value,derived")
+    for name in names:
+        fn = fb.ALL[name]
+        t1 = time.time()
+        if args.full:
+            try:
+                fn(120_000)          # larger op count where supported
+            except TypeError:
+                fn()
+        else:
+            fn()
+        print(f"# {name} done in {time.time()-t1:.1f}s", flush=True)
+    # db_bench (paper §5: amplification-only, Meta-style population)
+    try:
+        from repro.bench_kv.db_bench import fillrandom
+        from repro.core import LSMConfig
+        from .common import SCALE, emit
+        for dist in ("uniform", "pareto"):
+            for nm, cfg in (("vlsm", LSMConfig.vlsm_default(scale=SCALE)),
+                            ("rocksdb", LSMConfig.rocksdb_default(scale=SCALE))):
+                row = fillrandom(cfg, 60_000, dist=dist, scale=SCALE)
+                emit(f"db_bench.{dist}.io_amp.{nm}", row["io_amp"],
+                     f"levels={row['levels_filled']}")
+    except Exception as e:  # pragma: no cover
+        print(f"# db_bench skipped: {e}")
+    # serving-integration tail benchmark
+    try:
+        from .serving_tail import bench_serving_tail
+        bench_serving_tail()
+    except Exception as e:  # pragma: no cover
+        print(f"# serving_tail skipped: {e}")
+    # distributed wire benchmark (fast, lowering only)
+    try:
+        from .compression_wire import bench_wire
+        bench_wire()
+    except Exception as e:  # pragma: no cover
+        print(f"# compression_wire skipped: {e}")
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Serving example: batched requests with the LSM-backed prefix cache.
+
+Serves prompts sharing system prefixes through prefill+decode; the prefix
+cache (vLSM-indexed page table) turns repeat prefixes into cache hits.
+
+    PYTHONPATH=src python examples/serve_kv_cache.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import run
+
+
+def main():
+    out = run("qwen3_1_7b", smoke=True, n_requests=10, decode_tokens=12)
+    s = out["stats"]
+    print(f"requests: 10; prefix hits: {s['prefix_hits']}; "
+          f"tokens reused: {s['tokens_reused']}")
+    print(f"latency p50 {s['p50_ms']:.0f} ms, p99 {s['p99_ms']:.0f} ms")
+    print(f"prefix cache: {s['prefix_cache']}")
+    assert s["prefix_hits"] >= 4
+    print("OK: prefix cache served repeat prefixes from pinned pages.")
+
+
+if __name__ == "__main__":
+    main()

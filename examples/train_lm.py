@@ -1,0 +1,37 @@
+"""End-to-end training driver example: train a (reduced) llama3.2-class
+model for a few hundred steps with incremental LSM checkpoints, an
+injected node failure mid-run, restore, and loss-curve verification.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_2_3b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--fail-at", type=int, default=120)
+    args = ap.parse_args()
+    out = run(args.arch, smoke=True, steps=args.steps, batch=8, seq=64,
+              ckpt_every=40, fail_at=args.fail_at, log_every=20)
+    losses = np.asarray(out["losses"])
+    print(f"\nsteps={len(losses)} restarts={out['restarts']}")
+    print(f"loss: first20={losses[:20].mean():.4f} "
+          f"last20={losses[-20:].mean():.4f}")
+    print(f"checkpoint index (vLSM policy): {out['index_stats']}")
+    assert losses[-20:].mean() < losses[:20].mean(), "no learning progress?"
+    print("OK: model learned through a failure + restore.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Workload drivers: YCSB (§5, open-loop modified YCSB) and db_bench."""
+
+from .workloads import (WorkloadSpec, make_load_a, make_run_a, make_run_b,
+                        make_run_c, make_run_d, zipf_keys)
+from .ycsb import YCSBResult, run_ycsb, sustainable_throughput
+
+__all__ = [
+    "WorkloadSpec", "YCSBResult", "make_load_a", "make_run_a", "make_run_b",
+    "make_run_c", "make_run_d", "run_ycsb", "sustainable_throughput",
+    "zipf_keys",
+]

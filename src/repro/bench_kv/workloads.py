@@ -1,0 +1,110 @@
+"""YCSB / db_bench workload generators (key streams + op mixes).
+
+The paper's methodology (§5): YCSB Load A (100% insert) for write tails,
+Run A (50r/50u), Run B (95r/5u), Run C (100r), Run D (95 read-latest /
+5 insert); uniform and Zipfian(0.99) request distributions; db_bench-style
+fillrandom with uniform and Pareto key popularity (Meta's production mix).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+KEYSPACE = 1 << 48
+
+
+@dataclass
+class WorkloadSpec:
+    name: str
+    op_types: np.ndarray       # 0 = put, 1 = get
+    keys: np.ndarray
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def load_keys(n: int, seed: int = 7) -> np.ndarray:
+    """Distinct-ish uniform keys for the load phase."""
+    return _rng(seed).integers(0, KEYSPACE, size=n, dtype=np.int64)
+
+
+def zipf_keys(population: np.ndarray, n: int, theta: float = 0.99,
+              seed: int = 11) -> np.ndarray:
+    """YCSB-style Zipfian sampling over an item population.
+
+    Ranks are sampled with probability ∝ 1/rank^theta via inverse-CDF over
+    the (normalized) generalized harmonic cumsum — exact, vectorized.
+    """
+    m = population.shape[0]
+    ranks = np.arange(1, m + 1, dtype=np.float64)
+    w = 1.0 / ranks ** theta
+    cdf = np.cumsum(w)
+    cdf /= cdf[-1]
+    u = _rng(seed).random(n)
+    idx = np.searchsorted(cdf, u, side="left")
+    # YCSB scatters the hot ranks across the keyspace via a hash; shuffling
+    # the population achieves the same decorrelation.
+    perm = _rng(seed + 1).permutation(m)
+    return population[perm[idx]]
+
+
+def pareto_keys(population: np.ndarray, n: int, alpha: float = 1.16,
+                seed: int = 13) -> np.ndarray:
+    """Pareto popularity (db_bench's Meta-production-like distribution)."""
+    m = population.shape[0]
+    r = _rng(seed)
+    raw = r.pareto(alpha, size=n)
+    idx = np.minimum((raw / (raw.max() + 1e-9) * m).astype(np.int64), m - 1)
+    perm = _rng(seed + 1).permutation(m)
+    return population[perm[idx]]
+
+
+def make_load_a(n: int, seed: int = 7) -> WorkloadSpec:
+    return WorkloadSpec("load_a", np.zeros(n, np.uint8), load_keys(n, seed))
+
+
+def _mixed(name: str, population: np.ndarray, n: int, read_frac: float,
+           dist: str, seed: int) -> WorkloadSpec:
+    r = _rng(seed)
+    op_types = (r.random(n) < read_frac).astype(np.uint8)  # 1 = read
+    if dist == "zipfian":
+        keys = zipf_keys(population, n, seed=seed + 2)
+    elif dist == "pareto":
+        keys = pareto_keys(population, n, seed=seed + 2)
+    else:
+        keys = population[r.integers(0, population.shape[0], size=n)]
+    return WorkloadSpec(name, op_types, keys)
+
+
+def make_run_a(population: np.ndarray, n: int, dist: str = "uniform",
+               seed: int = 21) -> WorkloadSpec:
+    return _mixed("run_a", population, n, 0.5, dist, seed)
+
+
+def make_run_b(population: np.ndarray, n: int, dist: str = "uniform",
+               seed: int = 23) -> WorkloadSpec:
+    return _mixed("run_b", population, n, 0.95, dist, seed)
+
+
+def make_run_c(population: np.ndarray, n: int, dist: str = "uniform",
+               seed: int = 25) -> WorkloadSpec:
+    return _mixed("run_c", population, n, 1.0, dist, seed)
+
+
+def make_run_d(population: np.ndarray, n: int, seed: int = 27) -> WorkloadSpec:
+    """95% read-latest / 5% insert."""
+    r = _rng(seed)
+    op_types = (r.random(n) < 0.95).astype(np.uint8)
+    keys = np.empty(n, np.int64)
+    inserts = np.nonzero(op_types == 0)[0]
+    keys[inserts] = load_keys(inserts.shape[0], seed + 1)
+    # read-latest: sample recent inserts with geometric recency bias
+    reads = np.nonzero(op_types == 1)[0]
+    pool = np.concatenate([population, keys[inserts]])
+    lag = r.geometric(p=0.01, size=reads.shape[0])
+    idx = np.maximum(pool.shape[0] - lag, 0)
+    keys[reads] = pool[idx]
+    return WorkloadSpec("run_d", op_types, keys)

@@ -1,0 +1,3 @@
+from .lsm_checkpoint import PAGE_BYTES, LSMCheckpointStore
+
+__all__ = ["LSMCheckpointStore", "PAGE_BYTES"]

@@ -1,0 +1,5 @@
+from .base import SHAPES, ModelConfig, ShapeSpec
+from .registry import ARCH_IDS, all_configs, get_config
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeSpec", "all_configs",
+           "get_config"]

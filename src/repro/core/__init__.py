@@ -1,0 +1,18 @@
+"""vLSM core: the paper's contribution (compaction-chain-aware LSM KV store).
+
+Public API::
+
+    from repro.core import LSMConfig, Policy, DeviceModel, LSMTree, Simulator
+"""
+
+from .lsm import Job, LSMTree
+from .memtable import Memtable
+from .sim import SimResult, Simulator
+from .sst import SST
+from .stats import ChainRecord, Stats
+from .types import DeviceModel, LSMConfig, Policy
+
+__all__ = [
+    "ChainRecord", "DeviceModel", "Job", "LSMConfig", "LSMTree", "Memtable",
+    "Policy", "SST", "SimResult", "Simulator", "Stats",
+]

@@ -1,0 +1,471 @@
+"""The LSM tree with compaction chains — vLSM (§4) and the baselines (§3).
+
+Structural state (which SSTs live where) mutates *eagerly* when a compaction
+is triggered; *time* is owned by the discrete-event simulation in
+``repro.core.sim``, which schedules the :class:`Job` records this module
+emits onto background compaction slots and derives stalls / P99 from their
+completion times.  This split keeps the store's merge work 100% real (actual
+sorted-array merges over actual keys — real overlaps, real vSST splits, real
+amplification) while staying deterministic and replayable on CPU.
+
+Policies (Fig. 3 of the paper):
+
+* ``rocksdb`` / ``rocksdb_io`` / ``adoc`` — tiering compaction in L0: when L0
+  fills, *all* L0 SSTs merge with *all* overlapping L1 SSTs (the wide first
+  chain stage), after a bottom-up cascade frees L1.  ``rocksdb`` allows
+  bounded compaction debt, ``rocksdb_io`` none, ``adoc`` large debt plus
+  batched background compactions (the scheduling approach).
+* ``lsmi`` — incremental without tiering and fixed-size L1 SSTs (Fig 3a):
+  one L0 SST at a time but every compaction rewrites the whole overlap.
+* ``vlsm`` — no tiering (single FIFO L0 SST per compaction), small SSTs,
+  growth factor ``phi`` between L1 and L2, and overlap-aware vSSTs in L1 with
+  good/poor selection (§4.2).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import merge as merge_backend
+from .memtable import Memtable
+from .sst import SST, overlapping, split_fixed, total_size
+from .stats import ChainRecord, Stats
+from .types import LSMConfig, Policy
+from .vsst import l2_fences, overlap_count_range, plan_vssts, select_good_vssts
+
+_job_ids = itertools.count()
+
+
+@dataclass
+class Job:
+    """A unit of background device work, scheduled by the DES."""
+
+    kind: str                    # "flush" | "compact"
+    level: int                   # source level (-1 for memtable flush)
+    bytes_read: int
+    bytes_written: int
+    n_in_ssts: int
+    n_out_ssts: int
+    deps: list["Job"] = field(default_factory=list)
+    uid: int = field(default_factory=lambda: next(_job_ids))
+    l0_consumed: int = 0         # L0 SSTs this job removed (for the DES)
+    # filled by the DES:
+    t_start: float = 0.0
+    t_finish: float = 0.0
+    scheduled: bool = False
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bytes_read + self.bytes_written
+
+
+class LSMTree:
+    """A single region's LSM index."""
+
+    def __init__(self, cfg: LSMConfig, stats: Stats | None = None):
+        self.cfg = cfg
+        self.stats = stats if stats is not None else Stats()
+        self.memtable = Memtable(cfg.memtable_size, cfg.kv_size)
+        self.immutables: list[Memtable] = []
+        # levels[0] is L0: FIFO, newest LAST; overlapping allowed.
+        # levels[i>=1]: sorted by key, pairwise disjoint.
+        self.levels: list[list[SST]] = [[] for _ in range(cfg.max_levels)]
+        self.seq = 0
+        self.pending_jobs: list[Job] = []
+
+    # ------------------------------------------------------------ ingest
+    def put_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Insert keys (must fit in the active memtable); returns their seqs."""
+        n = int(keys.shape[0])
+        assert n <= self.memtable.room, "caller must chunk at memtable capacity"
+        seqs = np.arange(self.seq, self.seq + n, dtype=np.int64)
+        self.seq += n
+        self.memtable.put_batch(np.asarray(keys, np.int64), seqs)
+        self.stats.user_bytes += n * self.cfg.kv_size
+        self.stats.ops += n
+        return seqs
+
+    def seal_memtable(self) -> None:
+        assert self.memtable.full or self.memtable.n > 0
+        self.immutables.append(self.memtable)
+        self.memtable = Memtable(self.cfg.memtable_size, self.cfg.kv_size)
+
+    def flush_immutable(self) -> tuple[Job, list[Job]]:
+        """Flush the oldest immutable memtable to L0.
+
+        Returns ``(flush_job, chain_jobs)``: the flush itself, plus any
+        compaction chain that had to be triggered because L0 was at its
+        compaction trigger.  ``flush_job`` depends on the chain's head (the
+        L0 compaction) when one was needed *and* L0 was at the stop limit.
+        """
+        chain_jobs: list[Job] = []
+        l0 = self.levels[0]
+        if len(l0) >= self.cfg.l0_max_ssts:
+            chain_jobs = self._compact_l0_trigger()
+        blocking: list[Job] = []
+        if len(self.levels[0]) >= self.cfg.l0_stop_ssts and chain_jobs:
+            blocking = [chain_jobs[-1]]  # chain head: the L0 compaction
+        mt = self.immutables.pop(0)
+        sst = mt.to_sst()
+        if sst.n == 0:
+            job = Job("flush", -1, 0, 0, 0, 0, deps=blocking)
+            self.pending_jobs.append(job)
+            return job, chain_jobs
+        self.levels[0].append(sst)
+        self.stats.flush_bytes += sst.size
+        self.stats.ssts_created += 1
+        self.stats.manifest_flushes += 1
+        job = Job("flush", -1, 0, sst.size, 0, 1, deps=blocking)
+        self.pending_jobs.append(job)
+        return job, chain_jobs
+
+    # ------------------------------------------------------- compactions
+    def _compact_l0_trigger(self) -> list[Job]:
+        """L0 is at its trigger: run the policy's L0 compaction, recording
+        the full chain (deeper stages first).  Returns jobs deepest-first;
+        the last job is the L0 stage."""
+        jobs, stage_bytes = self._compact_from(0)
+        levels_touched = {j.level for j in jobs}
+        self.stats.chains.append(ChainRecord(
+            length=len(levels_touched),
+            width_bytes=sum(j.total_bytes for j in jobs),
+            stage_bytes=stage_bytes,
+        ))
+        return jobs
+
+    def _compact_from(self, level: int) -> tuple[list[Job], list[int]]:
+        """Compact from ``level`` into ``level+1``, first ensuring space
+        below (the dependent chain).  Deeper jobs precede shallower ones and
+        the shallower job depends on them."""
+        cfg = self.cfg
+        jobs: list[Job] = []
+        stage_bytes: list[int] = []
+        incoming = self._incoming_bytes(level)
+        # Ensure the target level has room (unless it is the last level).
+        if level + 1 < cfg.max_levels - 1:
+            while (total_size(self.levels[level + 1]) + incoming
+                   > cfg.level_limit(level + 1)):
+                sub, sub_stage = self._compact_from(level + 1)
+                if not sub:
+                    break
+                jobs.extend(sub)
+                stage_bytes.extend(sub_stage)
+        deps = [jobs[-1]] if jobs else []
+        job = self._do_compact(level, deps)
+        if job is not None:
+            jobs.append(job)
+            stage_bytes.append(job.total_bytes)
+        return jobs, stage_bytes
+
+    def _incoming_bytes(self, level: int) -> int:
+        cfg = self.cfg
+        if level == 0:
+            if cfg.tiering:
+                return total_size(self.levels[0])
+            return self.levels[0][0].size if self.levels[0] else cfg.sst_size
+        return cfg.sst_size
+
+    def _do_compact(self, level: int, deps: list[Job]) -> Job | None:
+        cfg = self.cfg
+        if level == 0:
+            if cfg.tiering:
+                return self._tiering_l0(deps)
+            return self._incremental_l0(deps)
+        if cfg.policy == Policy.VLSM and level == 1:
+            return self._vlsm_l1(deps)
+        return self._leveled_pick(level, deps)
+
+    # --- L0 stage variants -------------------------------------------------
+    def _tiering_l0(self, deps: list[Job]) -> Job | None:
+        """RocksDB-family: merge ALL of L0 with ALL overlapping L1."""
+        l0 = self.levels[0]
+        if not l0:
+            return None
+        lo = min(s.smallest for s in l0)
+        hi = max(s.largest for s in l0)
+        l1_over = overlapping(self.levels[1], lo, hi)
+        runs = [(s.keys, s.seqs) for s in reversed(l0)]  # newest first
+        runs += [(s.keys, s.seqs) for s in l1_over]
+        keys, seqs = merge_backend.merge_runs(runs)
+        self.stats.merged_keys += int(keys.shape[0])
+        new = split_fixed(keys, seqs, self.cfg.kv_size, self.cfg.sst_size)
+        self._replace_in_level(1, l1_over, new)
+        read_b = total_size(l0) + total_size(l1_over)
+        write_b = sum(s.size for s in new)
+        n_l0 = len(l0)
+        self.levels[0] = []
+        job = self._emit_compact_job(0, read_b, write_b,
+                                     n_l0 + len(l1_over), len(new), deps)
+        job.l0_consumed = n_l0
+        return job
+
+    def _incremental_l0(self, deps: list[Job]) -> Job | None:
+        """vLSM / LSMi: pick ONE L0 SST (FIFO) and merge into L1."""
+        l0 = self.levels[0]
+        if not l0:
+            return None
+        src = l0.pop(0)  # FIFO: oldest first (vLSM §4.1)
+        l1_over = overlapping(self.levels[1], src.smallest, src.largest)
+        runs = [(src.keys, src.seqs)] + [(s.keys, s.seqs) for s in l1_over]
+        keys, seqs = merge_backend.merge_runs(runs)
+        self.stats.merged_keys += int(keys.shape[0])
+        if self.cfg.policy == Policy.VLSM:
+            new = self._build_vssts(keys, seqs)
+        else:
+            new = split_fixed(keys, seqs, self.cfg.kv_size, self.cfg.sst_size)
+        self._replace_in_level(1, l1_over, new)
+        read_b = src.size + total_size(l1_over)
+        write_b = sum(s.size for s in new)
+        job = self._emit_compact_job(0, read_b, write_b,
+                                     1 + len(l1_over), len(new), deps)
+        job.l0_consumed = 1
+        return job
+
+    def _build_vssts(self, keys: np.ndarray, seqs: np.ndarray) -> list[SST]:
+        """Cut the merged L1 stream into overlap-aware vSSTs (§4.2)."""
+        cfg = self.cfg
+        fence_lo, fence_hi = l2_fences(self.levels[2])
+        plans = plan_vssts(keys, cfg.kv_size, cfg.s_m, cfg.s_M,
+                           cfg.growth_factor, fence_lo, fence_hi, cfg.sst_size)
+        self.stats.overlap_probes += int(keys.shape[0])  # per-key look-ahead
+        out: list[SST] = []
+        for p in plans:
+            sst = SST(keys[p.start:p.end], seqs[p.start:p.end], cfg.kv_size)
+            out.append(sst)
+            if p.good:
+                self.stats.vssts_good += 1
+                self.stats.vsst_good_bytes += sst.size
+            else:
+                self.stats.vssts_poor += 1
+                self.stats.vsst_poor_bytes += sst.size
+        return out
+
+    # --- L1+ stage variants --------------------------------------------------
+    def _vlsm_l1(self, deps: list[Job]) -> Job | None:
+        """§4.2.2: compact a set of *good* vSSTs whose cumulative size frees
+        room for the next L0 SST."""
+        cfg = self.cfg
+        l1 = self.levels[1]
+        if not l1:
+            return None
+        fence_lo, fence_hi = l2_fences(self.levels[2])
+        picked = select_good_vssts(l1, fence_lo, fence_hi, cfg.sst_size,
+                                   cfg.growth_factor, cfg.sst_size)
+        self.stats.overlap_probes += len(l1)
+        if not picked:
+            # Φ too large: no good vSSTs exist (paper's Fig 13 failure mode).
+            # Fall back to the least-bad vSST so the store still progresses.
+            ratios = [(overlap_count_range(fence_lo, fence_hi, s.smallest,
+                                           s.largest) * cfg.sst_size
+                       / max(1, s.size), i) for i, s in enumerate(l1)]
+            picked = [min(ratios)[1]]
+        return self._merge_down_multi(1, picked, deps)
+
+    def _leveled_pick(self, level: int, deps: list[Job]) -> Job | None:
+        """RocksDB's default scheduler: min overlap-ratio SST(s) first."""
+        cfg = self.cfg
+        src_level = self.levels[level]
+        if not src_level:
+            return None
+        nxt = self.levels[level + 1]
+        scores = []
+        for i, s in enumerate(src_level):
+            over = overlapping(nxt, s.smallest, s.largest)
+            ob = total_size(over)
+            scores.append((ob / max(1, s.size), i))
+        scores.sort()
+        n_pick = cfg.adoc_batch if cfg.policy == Policy.ADOC else 1
+        picked = [i for _r, i in scores[:n_pick]]
+        return self._merge_down_multi(level, picked, deps)
+
+    def _merge_down_multi(self, level: int, picked_idx: list[int],
+                          deps: list[Job]) -> Job | None:
+        """Merge the picked SSTs from ``level`` into ``level+1``.
+
+        Picked SSTs are grouped into *contiguous* runs (by position in the
+        level) so that the merge never pulls in next-level SSTs that sit in
+        an unpicked gap — that would spuriously inflate I/O amplification.
+        All groups are accounted as ONE chain stage (one Job), matching the
+        paper's "compacts a set of SSTs ... whose cumulative size equals
+        S_M" as a single compaction.
+        """
+        if not picked_idx:
+            return None
+        cfg = self.cfg
+        picked_idx = sorted(picked_idx)
+        groups: list[list[SST]] = []
+        run: list[int] = []
+        for i in picked_idx:
+            if run and i == run[-1] + 1:
+                run.append(i)
+            else:
+                if run:
+                    groups.append([self.levels[level][j] for j in run])
+                run = [i]
+        groups.append([self.levels[level][j] for j in run])
+
+        read_b = write_b = n_in = n_out = 0
+        for group in groups:
+            nxt = self.levels[level + 1]
+            lo = min(s.smallest for s in group)
+            hi = max(s.largest for s in group)
+            over = overlapping(nxt, lo, hi)
+            runs = [(s.keys, s.seqs) for s in group]
+            runs += [(s.keys, s.seqs) for s in over]
+            keys, seqs = merge_backend.merge_runs(runs)
+            self.stats.merged_keys += int(keys.shape[0])
+            new = split_fixed(keys, seqs, cfg.kv_size, cfg.sst_size)
+            self._replace_in_level(level + 1, over, new)
+            for s in group:
+                self.levels[level].remove(s)
+            read_b += total_size(group) + total_size(over)
+            write_b += sum(s.size for s in new)
+            n_in += len(group) + len(over)
+            n_out += len(new)
+        return self._emit_compact_job(level, read_b, write_b, n_in, n_out,
+                                      deps)
+
+    # --- shared helpers ------------------------------------------------------
+    def _replace_in_level(self, level: int, old: list[SST],
+                          new: list[SST]) -> None:
+        lvl = self.levels[level]
+        old_ids = {s.uid for s in old}
+        kept = [s for s in lvl if s.uid not in old_ids]
+        merged = kept + [s for s in new if s.n > 0]
+        merged.sort(key=lambda s: s.smallest)
+        self.levels[level] = merged
+
+    def _emit_compact_job(self, level: int, read_b: int, write_b: int,
+                          n_in: int, n_out: int, deps: list[Job]) -> Job:
+        self.stats.compact_bytes_read += read_b
+        self.stats.compact_bytes_written += write_b
+        self.stats.ssts_created += n_out
+        self.stats.manifest_flushes += 1
+        self.stats.note_compaction(level, read_b + write_b)
+        job = Job("compact", level, read_b, write_b, n_in, n_out, deps=deps)
+        self.pending_jobs.append(job)
+        return job
+
+    def background_triggers(self) -> list[Job]:
+        """Soft over-target compactions (debt designs run these proactively;
+        everyone runs them to converge after bursts).
+
+        ADOC intentionally lets levels run *past* target (compaction debt,
+        §3.3) and only compacts in big batches once they exceed 1.5× target
+        — that is the mechanism by which it trades I/O amplification
+        (larger overlaps while overfull) for fewer stalls.
+        """
+        jobs: list[Job] = []
+        cfg = self.cfg
+        soft = 1.5 if cfg.policy == Policy.ADOC else 1.0
+        for level in range(1, cfg.max_levels - 1):
+            guard = 0
+            while (total_size(self.levels[level])
+                   > soft * cfg.level_target(level) and guard < 64):
+                sub, _sb = self._compact_from(level)
+                if not sub:
+                    break
+                jobs.extend(sub)
+                guard += 1
+        return jobs
+
+    def drain_jobs(self) -> list[Job]:
+        out, self.pending_jobs = self.pending_jobs, []
+        return out
+
+    # ------------------------------------------------------------- lookup
+    def get(self, key: int) -> tuple[int | None, int, int]:
+        """Point lookup.  Returns (seq|None, device_block_reads, ssts_probed).
+
+        Probes: memtables (free), L0 newest→oldest (every overlapping SST),
+        then one fence-selected SST per level.  A bloom filter screens device
+        reads; false positives are modeled with a deterministic hash at the
+        configured FPR.
+        """
+        key = int(key)
+        reads = 0
+        probed = 0
+        hit = self.memtable.get(key)
+        if hit is not None:
+            return hit, reads, probed
+        for mt in reversed(self.immutables):
+            hit = mt.get(key)
+            if hit is not None:
+                return hit, reads, probed
+        for sst in reversed(self.levels[0]):
+            if not sst.may_contain(key):
+                continue
+            probed += 1
+            found, did_read = self._probe_sst(sst, key)
+            reads += did_read
+            if found is not None:
+                return found, reads, probed
+        for level in range(1, self.cfg.max_levels):
+            lvl = self.levels[level]
+            cand = overlapping(lvl, key, key)
+            for sst in cand:
+                probed += 1
+                found, did_read = self._probe_sst(sst, key)
+                reads += did_read
+                if found is not None:
+                    return found, reads, probed
+        return None, reads, probed
+
+    def _probe_sst(self, sst: SST, key: int) -> tuple[int | None, int]:
+        seq = sst.get(key)
+        if seq is not None:
+            return seq, 1  # bloom true positive -> one block read
+        # Deterministic pseudo-random bloom false positive.
+        h = (key * 0x9E3779B97F4A7C15 + sst.uid * 0xBF58476D1CE4E5B9) & 0xFFFFFFFF
+        if (h / 0xFFFFFFFF) < self.cfg.bloom_fpr:
+            return None, 1
+        return None, 0
+
+    # -------------------------------------------------------------- misc
+    def level_sizes(self) -> list[int]:
+        return [total_size(l) for l in self.levels]
+
+    def total_keys(self) -> int:
+        n = self.memtable.n + sum(m.n for m in self.immutables)
+        return n + sum(s.n for lvl in self.levels for s in lvl)
+
+    def check_invariants(self) -> None:
+        from .sst import level_check_disjoint
+        for sst in self.levels[0]:
+            sst.check_invariants()
+        for level in range(1, self.cfg.max_levels):
+            for sst in self.levels[level]:
+                sst.check_invariants()
+            level_check_disjoint(self.levels[level])
+        if self.cfg.policy == Policy.VLSM:
+            for sst in self.levels[1]:
+                # S_M plus the tail-absorption slack: a trailing fragment
+                # smaller than S_m merges into its predecessor (§4.2), so a
+                # vSST may legitimately reach S_M + S_m.
+                assert sst.size <= self.cfg.s_M + self.cfg.s_m + self.cfg.kv_size, \
+                    "vSST exceeds S_M + S_m tail slack"
+
+    def merged_view(self) -> dict[int, int]:
+        """Ground-truth key -> latest seq, for correctness tests."""
+        view: dict[int, int] = {}
+        for level in range(self.cfg.max_levels - 1, 0, -1):
+            for sst in self.levels[level]:
+                for k, s in zip(sst.keys.tolist(), sst.seqs.tolist()):
+                    prev = view.get(k)
+                    if prev is None or s > prev:
+                        view[k] = s
+        for sst in self.levels[0]:
+            for k, s in zip(sst.keys.tolist(), sst.seqs.tolist()):
+                prev = view.get(k)
+                if prev is None or s > prev:
+                    view[k] = s
+        for mt in self.immutables + [self.memtable]:
+            ks, ss = mt.to_sorted()
+            for k, s in zip(ks.tolist(), ss.tolist()):
+                prev = view.get(k)
+                if prev is None or s > prev:
+                    view[k] = s
+        return view

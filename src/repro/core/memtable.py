@@ -1,0 +1,74 @@
+"""Write buffer (memtable).
+
+PUTs append into growing chunks; at flush time the buffer is sorted with a
+stable argsort and deduplicated latest-wins — equivalent to a skiplist
+memtable's iterator, but vectorized.  GETs scan the unsorted tail (the sim
+issues GETs against full store state; memtable probes are modeled as free
+CPU work, as in the paper's cost model where memtable hits never touch the
+device).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .sst import SST
+
+
+class Memtable:
+    def __init__(self, capacity_bytes: int, kv_size: int):
+        self.capacity = capacity_bytes
+        self.kv_size = kv_size
+        self._keys: list[np.ndarray] = []
+        self._seqs: list[np.ndarray] = []
+        self._n = 0
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def size(self) -> int:
+        return self._n * self.kv_size
+
+    @property
+    def full(self) -> bool:
+        return self.size >= self.capacity
+
+    @property
+    def room(self) -> int:
+        """Number of puts that fit before the memtable is full."""
+        return max(0, (self.capacity - self.size) // self.kv_size)
+
+    def put_batch(self, keys: np.ndarray, seqs: np.ndarray) -> None:
+        assert keys.shape == seqs.shape
+        self._keys.append(np.asarray(keys, dtype=np.int64))
+        self._seqs.append(np.asarray(seqs, dtype=np.int64))
+        self._n += int(keys.shape[0])
+
+    def get(self, key: int) -> int | None:
+        best = None
+        for k, s in zip(self._keys, self._seqs):
+            hits = np.nonzero(k == key)[0]
+            if hits.size:
+                cand = int(s[hits].max())
+                best = cand if best is None else max(best, cand)
+        return best
+
+    def to_sorted(self) -> tuple[np.ndarray, np.ndarray]:
+        """Sorted, latest-wins-deduplicated contents."""
+        keys = np.concatenate(self._keys) if self._keys else np.empty(0, np.int64)
+        seqs = np.concatenate(self._seqs) if self._seqs else np.empty(0, np.int64)
+        if keys.size == 0:
+            return keys, seqs
+        # Stable sort on key keeps insertion order among equal keys; take the
+        # last occurrence of each key (highest seq, since seqs increase).
+        order = np.argsort(keys, kind="stable")
+        keys, seqs = keys[order], seqs[order]
+        last = np.ones(keys.shape[0], dtype=bool)
+        last[:-1] = keys[1:] != keys[:-1]
+        return keys[last], seqs[last]
+
+    def to_sst(self) -> SST:
+        keys, seqs = self.to_sorted()
+        return SST(keys, seqs, self.kv_size)

@@ -1,0 +1,306 @@
+"""Discrete-event simulation of the KV server (open-loop, §5 methodology).
+
+The paper measures tail latency with a modified YCSB that issues requests at
+a *fixed rate* into an unbounded queue (coordinated-omission-free).  The sim
+reproduces that exactly:
+
+* arrivals are deterministic (rate R) — the open-loop generator;
+* foreground service is a single FIFO queue with constant PUT CPU service
+  and per-GET service derived from the store's *actual* probe work (device
+  block reads × device model, inflated while compactions keep the device
+  busy);
+* background work (flushes + compaction chains emitted by the eager
+  structural LSM in :mod:`repro.core.lsm`) runs on a slot pool
+  (``DeviceModel.compaction_slots``); job durations come from real bytes;
+  jobs *sharing a source level* in the same region serialize (RocksDB's
+  per-level compaction exclusivity — the reason wide tiering chains cannot
+  hide behind thread parallelism), while independent levels overlap;
+* structural events advance on the **processed clock**: a memtable fills
+  when its last PUT is *serviced* (exact Lindley recursion maintained
+  incrementally), so under saturation compaction triggers spread out the
+  way a real store's do instead of bunching at arrival time;
+* write stalls are computed from *temporal* L0 occupancy: every flushed SST
+  occupies an L0 slot until the compaction job that consumed it finishes; a
+  fill event stalls when occupancy ≥ the stop limit (RocksDB's write-stop),
+  or when the previous flush is still in flight (write-buffer stall);
+* end-to-end latency is the exact Lindley recursion over the single queue,
+  vectorized:  D_i = S_i + max_{j<=i}(arr_j - S_{j-1}),  lat_i = D_i - arr_i.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .lsm import Job, LSMTree
+from .stats import Stats
+from .types import DeviceModel, LSMConfig
+
+PUT_SERVICE = 1.5e-6      # CPU service per put (s); ~max 0.7 Mops/s single queue
+GET_CPU = 2.0e-6          # CPU service per get before device reads
+BUSY_ALPHA = 0.6          # read-service inflation per concurrently-running job
+
+
+@dataclass
+class SimResult:
+    arrivals: np.ndarray
+    latency: np.ndarray            # end-to-end per op (s)
+    op_types: np.ndarray           # 0 = put, 1 = get
+    stall_total: float = 0.0
+    stall_max: float = 0.0
+    n_stalls: int = 0
+    stats: Stats | None = None
+    job_log: list[Job] = field(default_factory=list)
+    makespan: float = 0.0
+
+    def pct(self, q: float, op: int | None = None) -> float:
+        lat = self.latency if op is None else self.latency[self.op_types == op]
+        if lat.size == 0:
+            return 0.0
+        return float(np.percentile(lat, q))
+
+    @property
+    def p99(self) -> float:
+        return self.pct(99)
+
+    @property
+    def p99_put(self) -> float:
+        return self.pct(99, 0)
+
+    @property
+    def p99_get(self) -> float:
+        return self.pct(99, 1)
+
+    @property
+    def throughput(self) -> float:
+        return self.arrivals.shape[0] / max(self.makespan, 1e-9)
+
+    def completions_timeline(self, bins: int = 100) -> tuple[np.ndarray, np.ndarray]:
+        done = self.arrivals + self.latency
+        hist, edges = np.histogram(done, bins=bins)
+        centers = 0.5 * (edges[1:] + edges[:-1])
+        widths = np.diff(edges)
+        return centers, hist / np.maximum(widths, 1e-12)
+
+    def summary(self) -> dict:
+        out = {
+            "p50_ms": round(self.pct(50) * 1e3, 3),
+            "p90_ms": round(self.pct(90) * 1e3, 3),
+            "p99_ms": round(self.pct(99) * 1e3, 3),
+            "p99_put_ms": round(self.p99_put * 1e3, 3),
+            "p99_get_ms": round(self.p99_get * 1e3, 3),
+            "stall_total_s": round(self.stall_total, 4),
+            "stall_max_s": round(self.stall_max, 4),
+            "n_stalls": self.n_stalls,
+            "kops_s": round(self.throughput / 1e3, 1),
+        }
+        if self.stats is not None:
+            out.update(self.stats.summary())
+        return out
+
+
+class SlotPool:
+    """Background executor: earliest-free-slot scheduling with job deps and
+    per-(region, source-level) exclusivity."""
+
+    def __init__(self, n_slots: int):
+        self.free_at = [0.0] * max(1, n_slots)
+        self.level_free: dict[tuple[int, int], float] = {}
+
+    def schedule(self, job: Job, ready: float, duration: float,
+                 region: int = 0) -> None:
+        dep_ready = max((d.t_finish for d in job.deps), default=0.0)
+        lkey = (region, job.level)
+        start = max(ready, dep_ready, self.level_free.get(lkey, 0.0))
+        slot = min(range(len(self.free_at)), key=lambda i: self.free_at[i])
+        start = max(start, self.free_at[slot])
+        job.t_start = start
+        job.t_finish = start + duration
+        job.scheduled = True
+        self.free_at[slot] = job.t_finish
+        self.level_free[lkey] = job.t_finish
+
+
+class Simulator:
+    def __init__(self, cfg: LSMConfig, device: DeviceModel | None = None,
+                 n_regions: int = 1):
+        self.cfg = cfg
+        self.device = device or DeviceModel()
+        self.n_regions = n_regions
+        self.stats = Stats()
+        self.trees = [LSMTree(cfg, self.stats) for _ in range(n_regions)]
+        # Dedicated flush slot + shared compaction slots (RocksDB's
+        # high-priority flush pool vs low-priority compaction pool).
+        self.flush_pool = SlotPool(1)
+        self.compact_pool = SlotPool(max(1, self.device.compaction_slots - 1))
+        # temporal L0 occupancy per region: (appear_t, clears_at) lists
+        self.l0_entries: list[list[list[float]]] = [[] for _ in range(n_regions)]
+        self.flush_inflight: list[list[float]] = [[] for _ in range(n_regions)]
+        self.job_log: list[Job] = []
+        self.stall_events: list[tuple[int, float]] = []  # (op_idx, duration)
+
+    # ------------------------------------------------------------------
+    def _job_duration(self, job: Job) -> float:
+        d = self.device
+        return (d.read_time(job.bytes_read, max(1, job.n_in_ssts))
+                + d.write_time(job.bytes_written, max(1, job.n_out_ssts)))
+
+    def _schedule_drained(self, tree: LSMTree, region: int, t: float) -> None:
+        for job in tree.drain_jobs():
+            dur = self._job_duration(job)
+            if job.kind == "flush":
+                self.flush_pool.schedule(job, t, dur, region)
+                self.flush_inflight[region].append(job.t_finish)
+                if job.bytes_written > 0:
+                    # SST appears in L0 when the flush lands.
+                    self.l0_entries[region].append([job.t_finish, np.inf])
+            else:
+                self.compact_pool.schedule(job, t, dur, region)
+                if job.level == 0 and job.l0_consumed:
+                    self._consume_l0(region, job.l0_consumed, job.t_finish)
+            self.job_log.append(job)
+
+    def _consume_l0(self, region: int, k: int, clears_at: float) -> None:
+        pending = [e for e in self.l0_entries[region] if e[1] == np.inf]
+        pending.sort(key=lambda e: e[0])
+        for e in pending[:k]:
+            e[1] = clears_at
+
+    def _l0_stall(self, region: int, t: float) -> float:
+        """Wait until temporal L0 occupancy drops below the stop limit."""
+        stop = self.cfg.l0_stop_ssts
+        active = sorted(e[1] for e in self.l0_entries[region]
+                        if e[0] <= t and e[1] > t)
+        if len(active) < stop:
+            return 0.0
+        k = len(active) - stop  # waiting for the (k+1)-th clear
+        target = active[k]
+        if not np.isfinite(target):
+            target = max(self.compact_pool.free_at)
+        return max(0.0, target - t)
+
+    def _wb_stall(self, region: int, t: float) -> float:
+        """Write-buffer stall: previous flush still in flight."""
+        unfinished = sorted(f for f in self.flush_inflight[region] if f > t)
+        allowed = self.cfg.max_write_buffers - 1
+        if len(unfinished) < allowed:
+            return 0.0
+        return unfinished[len(unfinished) - allowed] - t
+
+    # ------------------------------------------------------------------
+    def run(self, op_types: np.ndarray, keys: np.ndarray,
+            arrivals: np.ndarray) -> SimResult:
+        n = op_types.shape[0]
+        assert keys.shape[0] == n and arrivals.shape[0] == n and n > 0
+        cfg = self.cfg
+        kpm = cfg.keys_per_memtable
+        service = np.where(op_types == 0, PUT_SERVICE, GET_CPU)
+        get_reads = np.zeros(n, dtype=np.int32)
+        block_t = (self.device.io_latency
+                   + self.device.block_size / self.device.read_bw)
+
+        regions = (keys % self.n_regions).astype(np.int64) \
+            if self.n_regions > 1 else np.zeros(n, np.int64)
+        put_mask = op_types == 0
+        put_idx = np.nonzero(put_mask)[0]
+
+        # Fill-event schedule: the op index at which each region's memtable
+        # fills = every kpm-th put routed to that region.
+        fill_events: list[tuple[int, int]] = []  # (op_idx, region)
+        for r in range(self.n_regions):
+            r_puts = put_idx[regions[put_idx] == r]
+            marks = r_puts[kpm - 1::kpm]
+            fill_events.extend((int(m), r) for m in marks)
+        fill_events.sort()
+
+        # Processed clock: D = departure time of the most recently serviced
+        # op (exact Lindley, maintained incrementally per window).
+        D = 0.0
+        prev = 0
+        for op_i, region in fill_events:
+            D = self._advance_clock(D, prev, op_i + 1, op_types, keys,
+                                    regions, get_reads, service, arrivals,
+                                    block_t)
+            prev = op_i + 1
+            t = D  # the fill happens when its last put is serviced
+            tree = self.trees[region]
+            tree.seal_memtable()
+            stall = self._wb_stall(region, t)
+            tree.flush_immutable()
+            self._schedule_drained(tree, region, t)
+            bg = tree.background_triggers()
+            if bg:
+                self._schedule_drained(tree, region, t)
+            stall = max(stall, self._l0_stall(region, t))
+            if stall > 0:
+                service[op_i] += stall
+                D += stall
+                self.stall_events.append((op_i, stall))
+        self._advance_clock(D, prev, n, op_types, keys, regions, get_reads,
+                            service, arrivals, block_t)
+
+        # --- read service refinement: device busy while compactions run ----
+        starts = np.sort(np.array([j.t_start for j in self.job_log
+                                   if j.kind == "compact"], dtype=np.float64))
+        ends = np.sort(np.array([j.t_finish for j in self.job_log
+                                 if j.kind == "compact"], dtype=np.float64))
+        busy = (np.searchsorted(starts, arrivals, side="right")
+                - np.searchsorted(ends, arrivals, side="right"))
+        is_get = op_types == 1
+        service[is_get] += (get_reads[is_get] * block_t
+                            * (BUSY_ALPHA * busy[is_get]))
+
+        # --- exact Lindley over the single FIFO queue ----------------------
+        S = np.cumsum(service)
+        base = arrivals.astype(np.float64).copy()
+        base[1:] -= S[:-1]
+        departures = S + np.maximum.accumulate(base)
+        latency = departures - arrivals
+
+        stalls = np.array([d for _i, d in self.stall_events]) \
+            if self.stall_events else np.zeros(0)
+        return SimResult(
+            arrivals=arrivals, latency=latency, op_types=op_types,
+            stall_total=float(stalls.sum()),
+            stall_max=float(stalls.max()) if stalls.size else 0.0,
+            n_stalls=int(stalls.size), stats=self.stats,
+            job_log=self.job_log, makespan=float(departures[-1]),
+        )
+
+    # ------------------------------------------------------------------
+    def _advance_clock(self, D: float, lo: int, hi: int, op_types, keys,
+                       regions, get_reads, service, arrivals,
+                       block_t: float) -> float:
+        """Apply ops [lo, hi) structurally and advance the processed clock.
+
+        Returns the departure time of op hi-1 (before any stall injection).
+        GET service includes the base device-read cost here; the
+        busy-inflation term is refined in a vectorized post-pass.
+        """
+        if hi <= lo:
+            return D
+        sl = slice(lo, hi)
+        w_types = op_types[sl]
+        w_keys = keys[sl]
+        w_regions = regions[sl]
+        for r in range(self.n_regions):
+            mask = (w_types == 0) & (w_regions == r)
+            if mask.any():
+                self.trees[r].put_batch(w_keys[mask])
+        g_idx = np.nonzero(w_types == 1)[0]
+        for gi in g_idx:
+            r = int(w_regions[gi])
+            _seq, reads, _probed = self.trees[r].get(int(w_keys[gi]))
+            get_reads[lo + gi] = reads
+            self.stats.device_reads += reads
+            self.stats.ops += 1
+        service[sl][g_idx] += get_reads[sl][g_idx] * block_t
+        # incremental Lindley: D_j = S_j + max(D_prev, max_k(a_k - S_{k-1}))
+        s = service[sl].astype(np.float64)
+        s_cum = np.cumsum(s)
+        a = arrivals[sl].astype(np.float64)
+        shifted = np.empty_like(s_cum)
+        shifted[0] = 0.0
+        shifted[1:] = s_cum[:-1]
+        return float(s_cum[-1] + max(D, float(np.max(a - shifted))))

@@ -1,0 +1,110 @@
+"""Sorted String Tables backed by numpy arrays.
+
+An SST is an immutable sorted run of (key, seq) pairs.  Values are implicit:
+the KV store's correctness contract is "a GET returns the payload written by
+the highest-seqno PUT", so carrying the seqno is sufficient to verify
+latest-wins semantics end-to-end (tests derive the payload as hash(key, seq)).
+Physical size is ``n_keys * kv_size`` bytes, matching the paper's fixed-size
+KV pairs (200 B in §5).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+class SST:
+    __slots__ = ("keys", "seqs", "kv_size", "uid")
+
+    def __init__(self, keys: np.ndarray, seqs: np.ndarray, kv_size: int):
+        assert keys.ndim == 1 and keys.shape == seqs.shape
+        self.keys = keys
+        self.seqs = seqs
+        self.kv_size = kv_size
+        self.uid = next(_ids)
+
+    # ------------------------------------------------------------------ meta
+    @property
+    def n(self) -> int:
+        return int(self.keys.shape[0])
+
+    @property
+    def size(self) -> int:
+        return self.n * self.kv_size
+
+    @property
+    def smallest(self) -> int:
+        return int(self.keys[0])
+
+    @property
+    def largest(self) -> int:
+        return int(self.keys[-1])
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"SST#{self.uid}[{self.smallest}..{self.largest}] n={self.n}"
+
+    # ----------------------------------------------------------------- query
+    def get(self, key: int) -> int | None:
+        """Return seqno for key or None."""
+        i = int(np.searchsorted(self.keys, key))
+        if i < self.n and int(self.keys[i]) == key:
+            return int(self.seqs[i])
+        return None
+
+    def may_contain(self, key: int) -> bool:
+        return self.smallest <= key <= self.largest
+
+    def check_invariants(self) -> None:
+        assert self.n > 0, "empty SST"
+        d = np.diff(self.keys)
+        assert np.all(d > 0), "SST keys must be strictly increasing"
+
+
+def sst_from_sorted(keys: np.ndarray, seqs: np.ndarray, kv_size: int) -> SST:
+    return SST(np.ascontiguousarray(keys), np.ascontiguousarray(seqs), kv_size)
+
+
+def split_fixed(keys: np.ndarray, seqs: np.ndarray, kv_size: int,
+                sst_size: int) -> list[SST]:
+    """Split a sorted run into fixed-size SSTs of at most ``sst_size`` bytes."""
+    per = max(1, sst_size // kv_size)
+    out = []
+    for i in range(0, keys.shape[0], per):
+        out.append(SST(keys[i:i + per], seqs[i:i + per], kv_size))
+    return out
+
+
+def total_size(ssts: list[SST]) -> int:
+    return sum(s.size for s in ssts)
+
+
+def overlapping(ssts: list[SST], lo: int, hi: int) -> list[SST]:
+    """SSTs from a *sorted, disjoint* level whose range intersects [lo, hi].
+
+    Uses the level's fence pointers (smallest keys) for O(log n) selection,
+    mirroring the manifest-range scan a real store performs.
+    """
+    if not ssts:
+        return []
+    smallest = np.fromiter((s.smallest for s in ssts), dtype=np.int64,
+                           count=len(ssts))
+    # first SST whose range could reach lo: the one before the first with
+    # smallest > lo (its largest may still be >= lo).
+    start = int(np.searchsorted(smallest, lo, side="right")) - 1
+    if start < 0:
+        start = 0
+    if ssts[start].largest < lo:
+        start += 1
+    end = int(np.searchsorted(smallest, hi, side="right"))
+    return ssts[start:end]
+
+
+def level_check_disjoint(ssts: list[SST]) -> None:
+    """Invariant: leveled runs are sorted by key and pairwise disjoint."""
+    for a, b in zip(ssts, ssts[1:]):
+        assert a.largest < b.smallest, (
+            f"overlapping leveled SSTs: {a} vs {b}")

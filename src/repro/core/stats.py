@@ -1,0 +1,118 @@
+"""Instrumentation: I/O amplification, compaction chains, vSST quality, CPU proxy.
+
+Every quantity the paper plots is derived from these counters:
+
+* I/O amplification  = (flush + compaction device writes) / user bytes
+* chain width/length = recorded per blocking L0 trigger (Figs 2 & 9)
+* write stalls       = filled in by the DES (``repro.core.sim``)
+* CPU efficiency     = cycle proxy from real work counters (merged keys,
+                       per-key overlap probes, SSTs created / manifest
+                       flushes) — the monotone stand-in for mpstat cycles/op.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ChainRecord:
+    """One compaction chain triggered to free space for L0/memtable."""
+
+    length: int            # number of level-to-level stages
+    width_bytes: int       # total bytes read+written across the chain
+    stage_bytes: list[int] = field(default_factory=list)
+
+
+# CPU-cycle proxy coefficients (constant across all policies, so ratios are
+# meaningful): cycles per merged key, per overlap probe, per SST created,
+# per manifest flush, per op baseline.
+CYC_MERGE_KEY = 30.0
+CYC_OVERLAP_PROBE = 60.0
+CYC_SST_CREATE = 200_000.0
+CYC_MANIFEST_FLUSH = 400_000.0
+CYC_OP_BASE = 2_000.0
+
+
+@dataclass
+class Stats:
+    # I/O accounting
+    user_bytes: int = 0
+    flush_bytes: int = 0
+    compact_bytes_read: int = 0
+    compact_bytes_written: int = 0
+    device_reads: int = 0            # point-lookup block reads
+    # work counters (CPU proxy)
+    merged_keys: int = 0
+    overlap_probes: int = 0
+    ssts_created: int = 0
+    manifest_flushes: int = 0
+    ops: int = 0
+    # structural records
+    chains: list[ChainRecord] = field(default_factory=list)
+    vssts_good: int = 0
+    vssts_poor: int = 0
+    vsst_good_bytes: int = 0
+    vsst_poor_bytes: int = 0
+    compactions_per_level: dict[int, int] = field(default_factory=dict)
+    level_bytes_moved: dict[int, int] = field(default_factory=dict)
+
+    # ------------------------------------------------------------- derived
+    @property
+    def write_amp(self) -> float:
+        if self.user_bytes == 0:
+            return 0.0
+        return (self.flush_bytes + self.compact_bytes_written) / self.user_bytes
+
+    @property
+    def io_amp(self) -> float:
+        """Read+write device traffic over user bytes (paper's I/O amp)."""
+        if self.user_bytes == 0:
+            return 0.0
+        total = (self.flush_bytes + self.compact_bytes_written
+                 + self.compact_bytes_read)
+        return total / self.user_bytes
+
+    @property
+    def cpu_cycles_per_op(self) -> float:
+        if self.ops == 0:
+            return 0.0
+        cyc = (CYC_MERGE_KEY * self.merged_keys
+               + CYC_OVERLAP_PROBE * self.overlap_probes
+               + CYC_SST_CREATE * self.ssts_created
+               + CYC_MANIFEST_FLUSH * self.manifest_flushes
+               + CYC_OP_BASE * self.ops)
+        return cyc / self.ops
+
+    @property
+    def mean_chain_width(self) -> float:
+        if not self.chains:
+            return 0.0
+        return sum(c.width_bytes for c in self.chains) / len(self.chains)
+
+    @property
+    def max_chain_width(self) -> int:
+        return max((c.width_bytes for c in self.chains), default=0)
+
+    @property
+    def mean_chain_length(self) -> float:
+        if not self.chains:
+            return 0.0
+        return sum(c.length for c in self.chains) / len(self.chains)
+
+    def note_compaction(self, level: int, bytes_moved: int) -> None:
+        self.compactions_per_level[level] = self.compactions_per_level.get(level, 0) + 1
+        self.level_bytes_moved[level] = self.level_bytes_moved.get(level, 0) + bytes_moved
+
+    def summary(self) -> dict:
+        return {
+            "io_amp": round(self.io_amp, 2),
+            "write_amp": round(self.write_amp, 2),
+            "chains": len(self.chains),
+            "mean_chain_width_mb": round(self.mean_chain_width / 1e6, 3),
+            "max_chain_width_mb": round(self.max_chain_width / 1e6, 3),
+            "mean_chain_length": round(self.mean_chain_length, 2),
+            "cycles_per_op": round(self.cpu_cycles_per_op, 0),
+            "vssts_good": self.vssts_good,
+            "vssts_poor": self.vssts_poor,
+        }

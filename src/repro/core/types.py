@@ -1,0 +1,166 @@
+"""Configuration dataclasses for the vLSM core.
+
+All sizes are in *bytes*. The paper's defaults (RocksDB-style) are encoded in
+:func:`LSMConfig.rocksdb_default`; the vLSM configuration of §4/§5 in
+:func:`LSMConfig.vlsm_default`.  Benchmarks scale the absolute sizes down
+(the container is laptop-scale) while preserving every ratio the paper's
+analysis depends on: ``memtable == S_M``, ``L1 = f * S_M`` (vLSM) or
+``L1 = L0`` (RocksDB), growth factor ``f`` across levels, and the larger
+``phi`` between L1 and L2 for vLSM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass
+
+
+class Policy(str, enum.Enum):
+    """Compaction-chain policy (the designs of Fig. 3 in the paper)."""
+
+    VLSM = "vlsm"            # Fig 3(d): no tiering, small SSTs, phi, vSSTs
+    ROCKSDB = "rocksdb"      # Fig 3(b): tiering L0 + leveled rest + debt
+    ROCKSDB_IO = "rocksdb_io"  # RocksDB with overflow (debt) disabled
+    ADOC = "adoc"            # Fig 3(c): tiering + debt + aggressive scheduling
+    LSMI = "lsmi"            # Fig 3(a): incremental, no tiering, fixed SSTs
+
+
+@dataclass(frozen=True)
+class DeviceModel:
+    """Deterministic storage-device model (replaces the paper's NVMe).
+
+    The reproduction target is *trends* (P99 ratios, stall shares, I/O
+    amplification), not absolute seconds, so a bandwidth/latency model is
+    sufficient and keeps the discrete-event simulation exact and replayable.
+    Defaults approximate the paper's Samsung 970 EVO Plus.
+    """
+
+    write_bw: float = 2.0e9       # sequential write bytes/s
+    read_bw: float = 3.5e9        # sequential read bytes/s
+    io_latency: float = 100e-6    # per-I/O setup latency (seconds)
+    block_size: int = 4096        # read granularity for point lookups
+    compaction_slots: int = 4     # background compaction/flush threads
+
+    def write_time(self, nbytes: int, n_ios: int = 1) -> float:
+        return nbytes / self.write_bw + n_ios * self.io_latency
+
+    def read_time(self, nbytes: int, n_ios: int = 1) -> float:
+        return nbytes / self.read_bw + n_ios * self.io_latency
+
+    @staticmethod
+    def scaled(lam: float) -> "DeviceModel":
+        """Device matched to a data scale ``lam = scale_bytes / 64 MiB``.
+
+        Bandwidth scales with the data while per-IO latency stays constant,
+        so a λ-scaled SST transfers in exactly the time a full-size SST
+        takes on the paper's NVMe — wall-clock stall magnitudes and the
+        seek-vs-transfer balance match the paper at every SST size.
+        """
+        return DeviceModel(write_bw=2.0e9 * lam, read_bw=3.5e9 * lam)
+
+
+@dataclass(frozen=True)
+class LSMConfig:
+    # --- data shape -------------------------------------------------------
+    kv_size: int = 200                  # bytes per KV pair (paper §5: 200 B)
+    # --- memory component -------------------------------------------------
+    memtable_size: int = 1 << 20        # bytes; == SST size, as in the paper
+    max_write_buffers: int = 2          # active + immutable (RocksDB default)
+    # --- on-device layout -------------------------------------------------
+    sst_size: int = 1 << 20             # S_M, the fixed SST size
+    l0_max_ssts: int = 4                # L0 compaction trigger (RocksDB: 4)
+    l0_stop_ssts: int = 8               # hard write-stop L0 file count
+    growth_factor: int = 8              # f across levels
+    phi: int = 32                       # vLSM growth factor L1 -> L2
+    max_levels: int = 5                 # L0..L4
+    # --- policy -----------------------------------------------------------
+    policy: Policy = Policy.VLSM
+    debt_factor: float = 0.0            # allowed overflow fraction per level
+                                        # (rocksdb: 0.25, adoc: 1.0, *_io: 0)
+    adoc_batch: int = 4                 # SSTs per compaction job under ADOC
+    # --- vSST policy (§4.2) -----------------------------------------------
+    vsst_min_frac: float | None = None  # S_m = S_M * frac; default 1/f
+    # --- lookup model -----------------------------------------------------
+    bloom_fpr: float = 0.01             # bloom-filter false-positive rate
+
+    # ----------------------------------------------------------------------
+    @property
+    def s_m(self) -> int:
+        """Minimum vSST size S_m (paper: S_M / f)."""
+        frac = self.vsst_min_frac if self.vsst_min_frac is not None else 1.0 / self.growth_factor
+        return max(self.kv_size, int(self.sst_size * frac))
+
+    @property
+    def s_M(self) -> int:
+        return self.sst_size
+
+    @property
+    def keys_per_sst(self) -> int:
+        return max(1, self.sst_size // self.kv_size)
+
+    @property
+    def keys_per_memtable(self) -> int:
+        return max(1, self.memtable_size // self.kv_size)
+
+    @property
+    def tiering(self) -> bool:
+        """Does L0 use a tiering compaction step (RocksDB-family designs)?"""
+        return self.policy in (Policy.ROCKSDB, Policy.ROCKSDB_IO, Policy.ADOC)
+
+    def level_target(self, level: int) -> int:
+        """Target size in bytes for a leveled level (level >= 1)."""
+        if level < 1:
+            return self.l0_max_ssts * self.memtable_size
+        if self.policy == Policy.VLSM:
+            l1 = self.growth_factor * self.sst_size
+            if level == 1:
+                return l1
+            l2 = self.phi * l1
+            return l2 * self.growth_factor ** (level - 2)
+        # RocksDB-family and LSMi: L1 sized like L0, then geometric.
+        l1 = self.l0_max_ssts * self.memtable_size
+        return l1 * self.growth_factor ** (level - 1)
+
+    def level_limit(self, level: int) -> int:
+        """Hard limit including compaction debt (overflow)."""
+        return int(self.level_target(level) * (1.0 + self.debt_factor))
+
+    def with_(self, **kw) -> "LSMConfig":
+        return dataclasses.replace(self, **kw)
+
+    # --- canned configurations -------------------------------------------
+    @staticmethod
+    def rocksdb_default(scale: int = 1 << 20) -> "LSMConfig":
+        """RocksDB defaults at a byte `scale` standing in for 64 MB."""
+        return LSMConfig(
+            memtable_size=scale, sst_size=scale, l0_max_ssts=4,
+            policy=Policy.ROCKSDB, debt_factor=0.25, growth_factor=8,
+        )
+
+    @staticmethod
+    def rocksdb_io_default(scale: int = 1 << 20) -> "LSMConfig":
+        return LSMConfig.rocksdb_default(scale).with_(
+            policy=Policy.ROCKSDB_IO, debt_factor=0.0)
+
+    @staticmethod
+    def adoc_default(scale: int = 1 << 20) -> "LSMConfig":
+        return LSMConfig.rocksdb_default(scale).with_(
+            policy=Policy.ADOC, debt_factor=1.0, adoc_batch=4)
+
+    @staticmethod
+    def vlsm_default(scale: int = 1 << 20, sst_frac: int = 8) -> "LSMConfig":
+        """vLSM §5 defaults: SSTs S_M = scale/sst_frac (8 MB when scale=64 MB),
+        memtable == S_M, L1 = f*S_M, phi = L0_rocksdb_equivalent/L1 ratio 32."""
+        sst = max(1, scale // sst_frac)
+        return LSMConfig(
+            memtable_size=sst, sst_size=sst, l0_max_ssts=4,
+            policy=Policy.VLSM, debt_factor=0.0, growth_factor=8, phi=32,
+        )
+
+    @staticmethod
+    def lsmi_default(scale: int = 1 << 20) -> "LSMConfig":
+        return LSMConfig(
+            memtable_size=scale, sst_size=scale, l0_max_ssts=4,
+            policy=Policy.LSMI, debt_factor=0.0, growth_factor=8,
+        )

@@ -1,0 +1,3 @@
+from .pipeline import BatchAllocator, PipelineState, TokenPipeline
+
+__all__ = ["BatchAllocator", "PipelineState", "TokenPipeline"]

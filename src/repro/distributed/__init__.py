@@ -1,0 +1,6 @@
+from .sharding import (batch_axes, cache_specs, decode_input_specs,
+                       param_specs, to_shardings, train_batch_specs,
+                       zero1_specs)
+
+__all__ = ["batch_axes", "cache_specs", "decode_input_specs", "param_specs",
+           "to_shardings", "train_batch_specs", "zero1_specs"]

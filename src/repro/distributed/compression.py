@@ -1,0 +1,86 @@
+"""int8 gradient compression with error feedback.
+
+``compressed_psum`` quantizes a tensor to int8 with a per-tensor scale,
+all-reduces the int8 payload (4x fewer wire bytes than f32, 2x fewer than
+bf16), and dequantizes.  ``compress_tree`` applies it with **error
+feedback**: the quantization residual is carried in ``opt_state['ef']`` and
+added back next step, which keeps SGD-style convergence (1-bit Adam
+lineage).  The train_step factory enables it with ``compress_grads=True``
+for the cross-pod reduction — the slow-link hop of the multi-pod mesh.
+
+benchmarks/compression_wire.py lowers both variants and diffs the parsed
+collective bytes (the dry-run methodology applied to one op).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Mean over ``axis`` with int8 on the wire (inside shard_map).
+
+    Formulated as an int8 all-gather + local dequant-sum (the 1-bit-Adam
+    family's transport): an fp32 ring psum moves ~2x fp32 bytes per
+    device, the int8 gather moves (G-1)/G x int8 bytes — an ~8x/G-adjusted
+    wire reduction that benchmarks/compression_wire.py verifies from the
+    compiled HLO.  Per-shard scales ride along (negligible) and make the
+    dequant exact per contributor.
+    """
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis)                  # [G, ...] int8 wire
+    ss = jax.lax.all_gather(scale, axis)              # [G] f32 (tiny)
+    n = qs.shape[0]
+    ss = ss.reshape((n,) + (1,) * x.ndim)
+    return jnp.sum(qs.astype(jnp.float32) * ss, axis=0) / n
+
+
+def compress_tree(grads, opt_state):
+    """Quantize every gradient leaf to int8 with error feedback.
+
+    Residuals live in opt_state['ef'] (created on first use).  In-pod
+    reductions already happened inside backward; this models the payload
+    handed to the cross-pod reduction.
+    """
+    ef = opt_state.get("ef")
+    if ef is None:
+        ef = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_ef = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_state = dict(opt_state)
+    new_state["ef"] = new_ef
+    return new_g, new_state
+
+
+def cross_pod_mean_compressed(mesh, tree):
+    """Explicit int8 cross-pod gradient mean (shard_map over 'pod')."""
+    def body(flat):
+        return [compressed_psum(x, "pod") for x in flat]
+    flat, tdef = jax.tree.flatten(tree)
+    specs = tuple(P() for _ in flat)
+    out = shard_map(body, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                    check_rep=False)(flat)
+    return jax.tree.unflatten(tdef, out)

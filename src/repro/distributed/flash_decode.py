@@ -1,0 +1,86 @@
+"""Sequence-sharded decode attention ("flash decoding") via shard_map.
+
+Baseline decode for archs whose KV heads don't divide the model axis keeps
+the cache sequence-sharded and lets GSPMD all-gather it per layer — the
+collective-bound pattern §Roofline exposes.  This module is the optimized
+variant: each model shard computes attention over ITS slice of the cache
+and the shards combine with a max-rescaled partial softmax:
+
+    m = pmax(m_local);  l = psum(l_local * e^{m_local - m})
+    o = psum(o_local * e^{m_local - m}) / l
+
+Wire cost per layer drops from O(B·T·Hkv·D / shards) (gathering the cache)
+to O(B·H·D) (three tiny partials) — the decode_32k hillclimb lever.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def _local_partial(q, k_loc, v_loc, t0, pos, scale):
+    """Partial attention over a local cache slice.
+
+    q: [B, H, Dh]; k_loc/v_loc: [B, T_loc, Hk, Dh]; t0: global index of the
+    slice's first token; pos: [B].  Returns (o, l, m) partials.
+    """
+    b, h, dh = q.shape
+    hk = k_loc.shape[2]
+    g = h // hk
+    qg = q.reshape(b, hk, g, dh)
+    logits = jnp.einsum("bhgd,bthd->bhgt", qg.astype(jnp.float32),
+                        k_loc.astype(jnp.float32)) * scale
+    t_idx = t0 + jnp.arange(k_loc.shape[1])
+    mask = t_idx[None, :] <= pos[:, None]                     # [B, T_loc]
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    m = jnp.max(logits, axis=-1)                              # [B, Hk, G]
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v_loc.astype(jnp.float32))
+    return o, l, m
+
+
+def seq_sharded_decode_attn(mesh, q, k_cache, v_cache, pos, *,
+                            axis: str = "model",
+                            scale: float | None = None):
+    """q: [B, H, Dh]; caches [B, T, Hk, Dh] sequence-sharded over ``axis``.
+    Returns [B, H, Dh] with only O(B·H·Dh) on the wire."""
+    b, h, dh = q.shape
+    hk = k_cache.shape[2]
+    scale = scale if scale is not None else dh ** -0.5
+    t_total = k_cache.shape[1]
+    n_shards = mesh.shape[axis]
+    t_loc = t_total // n_shards
+
+    def body(q, k_loc, v_loc, pos):
+        idx = jax.lax.axis_index(axis)
+        o, l, m = _local_partial(q, k_loc, v_loc, idx * t_loc, pos, scale)
+        m_g = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axis)
+        o_g = jax.lax.psum(o * corr[..., None], axis)
+        out = o_g / jnp.maximum(l_g[..., None], 1e-30)
+        return out.reshape(b, h, dh).astype(q.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None, None), P(None, axis, None, None),
+                  P(None, axis, None, None), P(None)),
+        out_specs=P(None, None, None),
+        check_rep=False,
+    )(q, k_cache, v_cache, pos)
+
+
+def reference_decode_attn(q, k_cache, v_cache, pos, *, scale=None):
+    """Unsharded oracle for the shard_map combine."""
+    b, h, dh = q.shape
+    scale = scale if scale is not None else dh ** -0.5
+    o, l, m = _local_partial(q, k_cache, v_cache, 0, pos, scale)
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, h, dh).astype(q.dtype)

@@ -1,0 +1,191 @@
+"""Sharding rules: param/optimizer/input/cache PartitionSpecs per arch.
+
+Mesh contract (launch/mesh.py): ``("data", "model")`` single-pod or
+``("pod", "data", "model")`` multi-pod.  Batch shards over
+``("pod", "data")`` (pure DP across pods — pods only ever see
+batch-parallel collectives, keeping the slow inter-pod links off the TP
+critical path); tensor parallelism lives on the 16-wide intra-pod "model"
+axis (Megatron column->row pairs, EP for MoE experts, vocab-parallel
+embeddings).
+
+Where a config's head counts don't divide the model axis (gemma3's 4
+heads, whisper's 6, llama3.2's 24) GSPMD compiles anyway via padded
+shardings — the §Roofline table then shows the resharding cost explicitly,
+and §Perf hillclimbs pick better layouts for the cells where it dominates.
+SSM mixer weights are replicated (state heads rarely divide 16; the mixers
+are small), with the "model" axis still carrying MLP/attention TP in the
+hybrid and vocab TP everywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _spec_for_param(cfg, path: tuple[str, ...], ndim: int) -> P:
+    name = path[-1]
+    stacked = path[0] == "layers"   # leading scan dim
+
+    def pad(spec_dims: tuple) -> P:
+        missing = ndim - len(spec_dims)
+        return P(*([None] * missing + list(spec_dims)))
+
+    col = ("model",)
+    # --- embeddings / head ------------------------------------------------
+    if name == "embed":
+        return pad((
+            "model", None))
+    if name == "lm_head":
+        return pad((None, "model"))
+    # --- SSD mixer: replicate (see module docstring) -----------------------
+    if "ssd" in path:
+        return P(*([None] * ndim))
+    # --- attention ---------------------------------------------------------
+    import os
+    if os.environ.get("REPRO_ATTN_REPLICATED") == "1" and name in (
+            "wq", "wk", "wv", "wo"):
+        # §Perf variant: replicate attention weights (small for GQA archs
+        # whose head counts don't divide the model axis) so activations
+        # never reshard around the head split.
+        return P(*([None] * ndim))
+    if name in ("wq", "wk", "wv", "w_uk", "w_uv"):
+        return pad((None, "model"))
+    if name == "wo":
+        return pad(("model", None))
+    if name in ("w_dkv", "w_kr"):
+        return P(*([None] * ndim))
+    # --- MLP ----------------------------------------------------------------
+    if name in ("w_gate", "w_up", "s_gate", "s_up"):
+        return pad((None, "model"))
+    if name in ("w_down", "s_down"):
+        return pad(("model", None))
+    if name == "b_up":
+        return pad(("model",))
+    if name == "b_down":
+        return P(*([None] * ndim))
+    # --- MoE: expert-parallel over the model axis ---------------------------
+    if name in ("e_gate", "e_up", "e_down"):
+        return pad(("model", None, None))
+    if name == "router":
+        return P(*([None] * ndim))
+    del stacked, col
+    # norms, biases, scalars: replicate
+    return P(*([None] * ndim))
+
+
+def param_specs(cfg, params_shape) -> dict:
+    """PartitionSpec pytree matching a params (shape) pytree."""
+    def fn(path, leaf):
+        names = tuple(p.key for p in path)
+        return _spec_for_param(cfg, names, len(leaf.shape))
+    return jax.tree_util.tree_map_with_path(fn, params_shape)
+
+
+def zero1_specs(cfg, params_shape, mesh) -> dict:
+    """Optimizer-moment specs: param spec + ZeRO-1 'data' sharding folded
+    onto the largest still-unsharded divisible axis."""
+    data = mesh.shape.get("data", 1)
+
+    def fn(path, leaf):
+        names = tuple(p.key for p in path)
+        spec = list(_spec_for_param(cfg, names, len(leaf.shape)))
+        best, best_dim = None, 0
+        for i, (s, d) in enumerate(zip(spec, leaf.shape)):
+            if s is None and d % data == 0 and d > best_dim:
+                best, best_dim = i, d
+        if best is not None and best_dim >= data:
+            spec[best] = "data"
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(fn, params_shape)
+
+
+def train_batch_specs(cfg, mesh) -> dict:
+    import os
+    ba = batch_axes(mesh)
+    # §Perf variant: sequence/context parallelism — shard the sequence dim
+    # over 'model' so activations stay distributed through the stack (the
+    # attention K/V all-gather is tiny next to resharded activations).
+    seq = "model" if os.environ.get("REPRO_SEQ_SHARD") == "1" else None
+    specs = {"tokens": P(ba, seq), "labels": P(ba, seq)}
+    if cfg.family == "encdec":
+        specs["encoder_embeds"] = P(ba, None, None)
+    if cfg.mrope_sections:
+        specs["positions"] = P(ba, seq, None)
+    return specs
+
+
+def cache_specs(cfg, mesh, *, batch1: bool = False) -> dict:
+    """Decode-cache specs.
+
+    Normal decode: batch shards over the batch axes; KV heads shard over
+    'model' when divisible, otherwise the *sequence* dim does (the
+    always-fits baseline; GSPMD all-gathers per layer during attention —
+    the flash-decode shard_map in distributed/flash_decode.py is the
+    optimized variant).
+
+    ``batch1`` (long_500k): the batch dim is unshardable, so the sequence
+    dim takes the data axes (plus 'model' when heads can't use it) — a
+    half-million-token cache spreads over all 256/512 chips.
+    """
+    da = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    ba = None if batch1 else batch_axes(mesh)
+    heads_ok = (cfg.n_kv_heads or 1) % mesh.shape.get("model", 1) == 0
+    if batch1:
+        seq = da + (() if heads_ok else ("model",))
+        hd = "model" if heads_ok else None
+    else:
+        seq = None if heads_ok else "model"
+        hd = "model" if heads_ok else None
+    ssm_heads_ok = (cfg.ssm_heads % mesh.shape.get("model", 1) == 0
+                    if cfg.ssm_state else False)
+    sh = "model" if ssm_heads_ok else None
+    if cfg.family in ("ssm", "hybrid"):
+        specs = {
+            "conv": P(None, ba, None, None),
+            "state": P(None, ba, sh, None, None),
+            "pos": P(None),
+        }
+        if cfg.attn_every:
+            specs["attn_k"] = P(None, ba, seq, hd, None)
+            specs["attn_v"] = P(None, ba, seq, hd, None)
+        return specs
+    if cfg.family == "encdec":
+        return {
+            "k": P(None, ba, seq, hd, None),
+            "v": P(None, ba, seq, hd, None),
+            "cross_k": P(None, ba, None, hd, None),
+            "cross_v": P(None, ba, None, hd, None),
+            "pos": P(None),
+        }
+    if cfg.attn_kind == "mla":
+        mseq = (da + ("model",)) if batch1 else "model"
+        specs = {
+            "ckv": P(None, ba, mseq, None),
+            "kr": P(None, ba, mseq, None),
+            "pos": P(None),
+        }
+        if cfg.first_dense_layers:
+            specs["d_ckv"] = P(None, ba, mseq, None)
+            specs["d_kr"] = P(None, ba, mseq, None)
+        return specs
+    return {
+        "k": P(None, ba, seq, hd, None),
+        "v": P(None, ba, seq, hd, None),
+        "pos": P(None),
+    }
+
+
+def decode_input_specs(cfg, mesh) -> dict:
+    ba = batch_axes(mesh)
+    return {"tokens": P(ba, None), "pos": P(ba)}
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

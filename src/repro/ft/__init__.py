@@ -1,0 +1,3 @@
+from .watchdog import FailureInjector, InjectedFailure, StepWatchdog
+
+__all__ = ["FailureInjector", "InjectedFailure", "StepWatchdog"]

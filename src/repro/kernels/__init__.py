@@ -1,0 +1,14 @@
+# Pallas TPU kernels for the perf-critical compute layers.
+#
+# Paper hot-spots:
+#   merge_path    — compaction sorted-run merge (merge-path diagonal tiling)
+#   overlap_scan  — §4.2 per-key L2-fence overlap probes (batched counts)
+# Framework hot-spots:
+#   flash_attention — blockwise train/prefill attention (causal/window/GQA)
+#   paged_attention — decode over the LSM-managed KV page pool
+#   ssd_scan        — Mamba2 SSD chunked scan
+#
+# Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+# (jit'd wrapper) and ref.py (pure-jnp oracle).  Kernels are validated in
+# interpret=True mode on CPU; TPU is the target.  Import lazily — these pull
+# in jax.

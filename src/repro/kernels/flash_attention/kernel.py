@@ -1,0 +1,124 @@
+"""Blockwise (flash) attention as a Pallas TPU kernel.
+
+Grid layout (MaxText-style): ``(batch*heads, q_blocks, k_blocks)`` with the
+KV dimension minor-most so the fp32 accumulator, running max and running
+denominator live in VMEM scratch across the KV sweep (TPU grid steps on the
+same core reuse scratch).  Per step:
+
+* load Q [BQ, D] (revisited across k steps — Pallas keeps the block in VMEM
+  since the index map is constant in ``kb``), K/V [BK, D];
+* S = Q @ K^T  (MXU, fp32 accumulate), masked for causal / sliding window;
+* online softmax rescale (running max ``m`` and sum ``l`` as [BQ, 128]
+  lanes-replicated tiles, the TPU-friendly layout for rowwise stats);
+* ACC += P @ V (MXU); final step writes ``ACC / l`` to the output block.
+
+Fully-masked blocks are skipped with ``pl.when`` (causal upper triangle and
+out-of-window diagonals), so wall-clock tracks the true mask density.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, bq: int, bk: int, n_kb: int, causal: bool,
+                  window: int | None, scale: float):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qb * bq
+    k_start = kb * bk
+
+    # Block-level mask reachability: causal needs k_start <= q_end; window
+    # needs k_end > q_start - window.
+    reachable = True
+    if causal:
+        reachable = k_start <= q_start + bq - 1
+    if window is not None:
+        reachable = jnp.logical_and(reachable,
+                                    k_start + bk - 1 > q_start - window)
+
+    @pl.when(reachable)
+    def _work():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), dtype=bool)
+        if causal:
+            mask &= kj <= qi
+        if window is not None:
+            mask &= (qi - kj) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...][:, :1]                      # [BQ, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)       # [BQ, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                          # [BQ, BK]
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                 # [BQ, 1]
+        l_new = alpha * l_ref[...][:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention_call(q, k, v, *, causal: bool = True,
+                         window: int | None = None,
+                         scale: float | None = None,
+                         bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                         interpret: bool = True):
+    """q, k, v: [BH, S, D] (heads pre-flattened, kv pre-repeated to Hq)."""
+    bh, s, d = q.shape
+    assert k.shape == (bh, s, d) and v.shape == (bh, s, d)
+    assert s % bq == 0 and s % bk == 0
+    scale = scale if scale is not None else d ** -0.5
+    n_kb = s // bk
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, n_kb=n_kb, causal=causal,
+        window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, s // bq, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, qb, kb: (h, qb, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, qb, kb: (h, kb, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, qb, kb: (h, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, qb, kb: (h, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention: full-materialization softmax
+attention with causal / sliding-window masks and GQA head grouping."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None) -> jnp.ndarray:
+    """q: [B, Hq, S, D]; k, v: [B, Hkv, S, D] with Hq % Hkv == 0."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= (qi - kj) < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    out /= jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return out.astype(q.dtype)

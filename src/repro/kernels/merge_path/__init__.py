@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import TILE, merge_path_call
+
+__all__ = ["TILE", "merge_path_call", "ops", "ref"]

@@ -1,0 +1,138 @@
+"""Merge-path sorted-run merge as a Pallas TPU kernel.
+
+The paper's compaction hot loop is a sequential two-pointer merge — a shape
+that wastes a TPU.  The TPU-native formulation used here:
+
+* the output is tiled into 128-element blocks (the VPU lane width);
+* each grid step binary-searches the **merge-path diagonal** for its tile
+  over the full runs (scalar ``pl.load`` probes, O(log n));
+* it then loads one 128-element window from each run into VMEM and computes
+  every element's output *rank* with a [128,128] comparison-matrix count —
+  rank(A_i) = i + |{j : B_j < A_i}|, rank(B_j) = j + |{i : A_i <= B_j}| —
+  a pair of full-tile VPU ops instead of a data-dependent loop;
+* the scatter to output positions is a masked select-sum over the same
+  [128,128] tile (scatter-free, layout-friendly).
+
+Keys are int64 split into (hi, lo) int32 planes (TPU int64 arithmetic is
+emulated and slow; 2×int32 lexicographic compares are native).  Payload
+seqnos ride along as a single int32 plane.  Stability: A wins ties, so
+feeding runs oldest-first keeps duplicate keys seq-ascending.
+
+Layout contract (enforced by ops.py): each run is padded to a multiple of
+TILE **plus one extra TILE of +inf sentinels**, so every diagonal window
+load is in bounds and "run exhausted" needs no special casing.  ``n_a`` /
+``n_b`` passed to the kernel are the sentinel-exclusive padded lengths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+HI_SENTINEL = jnp.iinfo(jnp.int32).max
+LO_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def _lex_lt(a_hi, a_lo, b_hi, b_lo):
+    """(a_hi, a_lo) < (b_hi, b_lo) lexicographic; lo planes are pre-biased
+    (xor 0x80000000) so signed int32 compare == unsigned compare on raw."""
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo < b_lo))
+
+
+def _lex_le(a_hi, a_lo, b_hi, b_lo):
+    return (a_hi < b_hi) | ((a_hi == b_hi) & (a_lo <= b_lo))
+
+
+def _merge_kernel(a_hi_ref, a_lo_ref, a_sq_ref, b_hi_ref, b_lo_ref, b_sq_ref,
+                  o_hi_ref, o_lo_ref, o_sq_ref, *, n_a: int, n_b: int):
+    tile = pl.program_id(0)
+    k0 = tile * TILE  # global output rank of this tile's first element
+
+    def probe(hi_ref, lo_ref, i):
+        i = jnp.maximum(i, 0)
+        return (pl.load(hi_ref, (pl.ds(i, 1),))[0],
+                pl.load(lo_ref, (pl.ds(i, 1),))[0])
+
+    # ---- merge-path diagonal: largest a0 with A[a0-1] <= B[k0-a0] ----------
+    lo_b = jnp.maximum(0, k0 - n_b)
+    hi_b = jnp.minimum(k0, n_a)
+    steps = max(n_a, 1).bit_length() + 1
+
+    def step(_, st):
+        lo_b, hi_b = st
+        mid = (lo_b + hi_b + 1) // 2
+        a_h, a_l = probe(a_hi_ref, a_lo_ref, mid - 1)
+        b_h, b_l = probe(b_hi_ref, b_lo_ref, k0 - mid)  # sentinel if == n_b
+        ok = (mid == 0) | _lex_le(a_h, a_l, b_h, b_l)
+        new_lo = jnp.where(ok, mid, lo_b)
+        new_hi = jnp.where(ok, hi_b, mid - 1)
+        active = lo_b < hi_b
+        return (jnp.where(active, new_lo, lo_b),
+                jnp.where(active, new_hi, hi_b))
+
+    a0, _ = jax.lax.fori_loop(0, steps, step, (lo_b, hi_b))
+    b0 = k0 - a0
+
+    # ---- 128-wide windows (always in bounds thanks to sentinel over-pad) --
+    aw_hi = pl.load(a_hi_ref, (pl.ds(a0, TILE),))
+    aw_lo = pl.load(a_lo_ref, (pl.ds(a0, TILE),))
+    aw_sq = pl.load(a_sq_ref, (pl.ds(a0, TILE),))
+    bw_hi = pl.load(b_hi_ref, (pl.ds(b0, TILE),))
+    bw_lo = pl.load(b_lo_ref, (pl.ds(b0, TILE),))
+    bw_sq = pl.load(b_sq_ref, (pl.ds(b0, TILE),))
+
+    idx = jax.lax.broadcasted_iota(jnp.int32, (TILE,), 0)
+
+    # ---- ranks via [128,128] comparison-count (two VPU tile ops) ----------
+    blt = _lex_lt(bw_hi[None, :], bw_lo[None, :], aw_hi[:, None], aw_lo[:, None])
+    cnt_b_before_a = jnp.sum(blt.astype(jnp.int32), axis=1)
+    ale = _lex_le(aw_hi[None, :], aw_lo[None, :], bw_hi[:, None], bw_lo[:, None])
+    cnt_a_before_b = jnp.sum(ale.astype(jnp.int32), axis=1)
+
+    r_a = idx + cnt_b_before_a          # rank within this output tile
+    r_b = idx + cnt_a_before_b
+
+    out_pos = idx
+    sel_a = r_a[:, None] == out_pos[None, :]
+    sel_b = r_b[:, None] == out_pos[None, :]
+
+    def scatter(vals_a, vals_b):
+        fa = jnp.sum(jnp.where(sel_a, vals_a[:, None], 0), axis=0)
+        fb = jnp.sum(jnp.where(sel_b, vals_b[:, None], 0), axis=0)
+        return (fa + fb).astype(jnp.int32)
+
+    o_hi_ref[...] = scatter(aw_hi, bw_hi)
+    o_lo_ref[...] = scatter(aw_lo, bw_lo)
+    o_sq_ref[...] = scatter(aw_sq, bw_sq)
+
+
+@functools.partial(jax.jit, static_argnames=("n_a", "n_b", "interpret"))
+def merge_path_call(a_hi, a_lo, a_sq, b_hi, b_lo, b_sq, *, n_a: int,
+                    n_b: int, interpret: bool = True):
+    """Invoke the kernel.
+
+    Inputs are the sentinel-padded planes of physical length ``n_a + TILE``
+    / ``n_b + TILE`` where ``n_a``/``n_b`` are multiples of TILE covering
+    the real run lengths.  Output has length ``n_a + n_b`` (real elements
+    first, then sentinels).
+    """
+    assert n_a % TILE == 0 and n_b % TILE == 0
+    assert a_hi.shape[0] == n_a + TILE and b_hi.shape[0] == n_b + TILE
+    n_out = n_a + n_b
+    grid = (n_out // TILE,)
+    kernel = functools.partial(_merge_kernel, n_a=n_a, n_b=n_b)
+    out_shape = [jax.ShapeDtypeStruct((n_out,), jnp.int32)] * 3
+    in_spec_a = pl.BlockSpec((n_a + TILE,), lambda i: (0,))
+    in_spec_b = pl.BlockSpec((n_b + TILE,), lambda i: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[in_spec_a] * 3 + [in_spec_b] * 3,
+        out_specs=[pl.BlockSpec((TILE,), lambda i: (i,))] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(a_hi, a_lo, a_sq, b_hi, b_lo, b_sq)

@@ -1,0 +1,71 @@
+"""jit'd wrapper around the merge-path kernel: int64 <-> (hi, lo) planes,
+sentinel padding, and the numpy convenience entry used by the LSM core's
+``pallas`` merge backend."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import HI_SENTINEL, LO_SENTINEL, TILE, merge_path_call
+
+_BIAS = np.int64(0x8000_0000)
+
+
+def split_planes(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """int64 key -> (hi, lo) int32 planes with order-preserving lo bias.
+
+    hi = key >> 32 (arithmetic); lo = bit-reinterpret((key & 0xffffffff)
+    ^ 0x80000000) so a *signed* int32 compare on lo matches the unsigned
+    compare on the raw low word; (hi, lo) lexicographic == int64 order.
+    """
+    keys = np.asarray(keys, np.int64)
+    hi = (keys >> 32).astype(np.int32)
+    raw = (keys & 0xFFFF_FFFF).astype(np.uint32)
+    lo = (raw ^ np.uint32(0x8000_0000)).view(np.int32)
+    return hi, np.ascontiguousarray(lo)
+
+
+def join_planes(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    hi = np.asarray(hi, np.int64)
+    raw = (np.ascontiguousarray(np.asarray(lo, np.int32)).view(np.uint32)
+           ^ np.uint32(0x8000_0000)).astype(np.int64)
+    return (hi << 32) | raw
+
+
+def _pad_run(hi: np.ndarray, lo: np.ndarray, sq: np.ndarray
+             ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    n = hi.shape[0]
+    n_pad = max(TILE, ((n + TILE - 1) // TILE) * TILE)
+    total = n_pad + TILE  # one extra sentinel tile for window loads
+    def pad(x, fill):
+        out = np.full(total, fill, np.int32)
+        out[:n] = x
+        return out
+    return (pad(hi, HI_SENTINEL), pad(lo, LO_SENTINEL),
+            pad(sq, 0), n_pad)
+
+
+def merge_two_runs_np(a_keys: np.ndarray, a_seqs: np.ndarray,
+                      b_keys: np.ndarray, b_seqs: np.ndarray,
+                      interpret: bool = True
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Stable merge of two sorted int64 runs via the TPU kernel
+    (interpret mode on CPU).  Seqnos must fit int32."""
+    n, m = int(a_keys.shape[0]), int(b_keys.shape[0])
+    if n == 0:
+        return np.asarray(b_keys, np.int64), np.asarray(b_seqs, np.int64)
+    if m == 0:
+        return np.asarray(a_keys, np.int64), np.asarray(a_seqs, np.int64)
+    assert np.all(np.abs(a_seqs) < 2**31) and np.all(np.abs(b_seqs) < 2**31)
+    a_hi, a_lo = split_planes(a_keys)
+    b_hi, b_lo = split_planes(b_keys)
+    a_hi, a_lo, a_sq, n_a = _pad_run(a_hi, a_lo, np.asarray(a_seqs, np.int32))
+    b_hi, b_lo, b_sq, n_b = _pad_run(b_hi, b_lo, np.asarray(b_seqs, np.int32))
+    o_hi, o_lo, o_sq = merge_path_call(
+        jnp.asarray(a_hi), jnp.asarray(a_lo), jnp.asarray(a_sq),
+        jnp.asarray(b_hi), jnp.asarray(b_lo), jnp.asarray(b_sq),
+        n_a=n_a, n_b=n_b, interpret=interpret)
+    keys = join_planes(np.asarray(o_hi), np.asarray(o_lo))[:n + m]
+    seqs = np.asarray(o_sq, np.int64)[:n + m]
+    return keys, seqs

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the merge-path kernel: stable two-run sorted merge.
+
+Keys are int64 split into (hi, lo) int32 planes by the ops layer; the oracle
+works on logical int64 keys directly.  Stability contract: on equal keys the
+element from run A precedes the element from run B (oldest-run-first, which
+keeps duplicate keys seq-ascending for the LSM's latest-wins dedup).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def merge_two_runs_ref(a_keys: jnp.ndarray, a_seqs: jnp.ndarray,
+                       b_keys: jnp.ndarray, b_seqs: jnp.ndarray
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable merge: A elements first on key ties."""
+    n, m = a_keys.shape[0], b_keys.shape[0]
+    keys = jnp.concatenate([a_keys, b_keys])
+    seqs = jnp.concatenate([a_seqs, b_seqs])
+    # stable sort on key keeps A (earlier positions) before B on ties
+    order = jnp.argsort(keys, stable=True)
+    del n, m
+    return keys[order], seqs[order]

@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import TILE, fence_rank_call
+
+__all__ = ["TILE", "fence_rank_call", "ops", "ref"]

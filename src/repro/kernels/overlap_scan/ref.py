@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for overlap_scan: batched fence-pointer rank counts.
+
+For each query key, the number of fence values <= key (i.e.
+``jnp.searchsorted(fences, keys, side='right')``).  The vSST look-ahead
+policy derives its per-key L2 overlap from exactly this count (§4.2: the
+overlap of [k_lo, k_hi] is rank_right(fence_lo, k_hi) - rank_left(fence_hi,
+k_lo)).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fence_rank_ref(fences: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    return jnp.searchsorted(fences, keys, side="right").astype(jnp.int32)

@@ -1,0 +1,5 @@
+from . import ops, ref
+from .kernel import paged_attention_call
+from .ops import paged_attention
+
+__all__ = ["paged_attention", "paged_attention_call", "ops", "ref"]

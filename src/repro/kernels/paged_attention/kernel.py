@@ -1,0 +1,107 @@
+"""Paged decode attention as a Pallas TPU kernel (scalar-prefetch gather).
+
+The serving layer stores KV-cache blocks in a page pool indexed by the
+LSM-backed prefix cache (``repro.serving``).  Decode attention must gather a
+sequence's pages by page-table indirection — on TPU the idiomatic form is
+**scalar prefetch**: the page table rides in SMEM ahead of the grid, and
+each grid step's BlockSpec index_map picks the right page out of HBM, so
+page loads are regular async copies instead of data-dependent gathers.
+
+Grid: ``(batch, kv_heads, max_pages)`` with online-softmax accumulators in
+VMEM scratch across the page sweep.  Q heads are grouped per KV head
+([G, D] tile, G = Hq/Hkv) so GQA costs one MXU op per page per group.
+Pages past a sequence's length are skipped with ``pl.when`` — decode cost
+tracks the *true* cache length, not the padded maximum (same property the
+vLSM store gives compaction: work ∝ live data).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(page_table_ref, lengths_ref,   # scalar prefetch (SMEM)
+                  q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref,
+                  *, page_size: int, max_pages: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = lengths_ref[b]
+    n_pages = (length + page_size - 1) // page_size
+
+    @pl.when(p < n_pages)
+    def _work():
+        q = q_ref[0, 0].astype(jnp.float32)       # [G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)    # [PS, D]
+        v = v_ref[0, :, 0].astype(jnp.float32)    # [PS, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        tok = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], page_size), 1)
+        mask = tok < length
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        pr = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            alpha * l_ref[...][:, :1] + jnp.sum(pr, axis=1, keepdims=True),
+            l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            pr, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(p == max_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...][:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_call(q, k_pages, v_pages, page_table, lengths, *,
+                         scale: float | None = None, interpret: bool = True):
+    """q: [B, Hkv, G, D] (grouped); pages: [NP, PS, Hkv, D];
+    page_table: [B, MAXP] int32; lengths: [B] int32 -> [B, Hkv, G, D]."""
+    b, hkv, g, d = q.shape
+    np_, ps, hkv2, _ = k_pages.shape
+    assert hkv2 == hkv
+    maxp = page_table.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    kernel = functools.partial(_paged_kernel, page_size=ps, max_pages=maxp,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b, h, p, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d), lambda b, h, p, pt, ln: (pt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, d), lambda b, h, p, pt, ln: (pt[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b, h, p, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pages, v_pages)

@@ -1,0 +1,27 @@
+"""jit'd wrapper: ungrouped [B, Hq, D] API over the grouped kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_attention_call
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                    v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                    lengths: jnp.ndarray, *, scale: float | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: [B, Hq, D]; pages: [NP, PS, Hkv, D] -> [B, Hq, D]."""
+    b, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    out = paged_attention_call(qg, k_pages, v_pages,
+                               page_table.astype(jnp.int32),
+                               lengths.astype(jnp.int32),
+                               scale=scale, interpret=interpret)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Gathers each sequence's pages into a contiguous KV view, then computes
+single-token attention with a length mask.  GQA grouping: q heads are
+grouped per KV head.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                        lengths: jnp.ndarray,
+                        scale: float | None = None) -> jnp.ndarray:
+    """q: [B, Hq, D]; k_pages/v_pages: [NP, PS, Hkv, D];
+    page_table: [B, MAXP] int32; lengths: [B] int32 -> [B, Hq, D]."""
+    b, hq, d = q.shape
+    np_, ps, hkv, _ = k_pages.shape
+    maxp = page_table.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+
+    k = k_pages[page_table]            # [B, MAXP, PS, Hkv, D]
+    v = v_pages[page_table]
+    k = k.reshape(b, maxp * ps, hkv, d)
+    v = v.reshape(b, maxp * ps, hkv, d)
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=2)     # [B, T, Hq, D]
+    v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    t_idx = jnp.arange(maxp * ps)[None, None, :]
+    mask = t_idx < lengths[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    out = jnp.einsum("bht,bthd->bhd", p, v.astype(jnp.float32))
+    out /= jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return out.astype(q.dtype)

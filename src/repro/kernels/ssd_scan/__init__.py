@@ -1,0 +1,5 @@
+from . import ops, ref
+from .kernel import ssd_scan_call
+from .ops import ssd_scan
+
+__all__ = ["ssd_scan", "ssd_scan_call", "ops", "ref"]

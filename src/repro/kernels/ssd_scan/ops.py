@@ -1,0 +1,40 @@
+"""jit'd wrapper: [B, L, H, P] model-layout API with chunk padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_CK, ssd_scan_call
+
+
+@functools.partial(jax.jit, static_argnames=("ck", "interpret"))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, *, ck: int = DEFAULT_CK,
+             interpret: bool = True) -> jnp.ndarray:
+    """x: [B, L, H, P]; dt: [B, L, H]; a: [H]; b, c: [B, L, G, N] with
+    H % G == 0 -> y: [B, L, H, P]."""
+    bsz, L, h, p = x.shape
+    g = b.shape[2]
+    rep = h // g
+    bf = jnp.repeat(b, rep, axis=2)                     # [B, L, H, N]
+    cf = jnp.repeat(c, rep, axis=2)
+    ckk = min(ck, L) if L % ck else ck
+    pad = (-L) % ckk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bf = jnp.pad(bf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cf = jnp.pad(cf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    n = bf.shape[-1]
+    xh = x.transpose(0, 2, 1, 3).reshape(bsz * h, Lp, p)
+    dth = dt.transpose(0, 2, 1).reshape(bsz * h, Lp)
+    bh_ = bf.transpose(0, 2, 1, 3).reshape(bsz * h, Lp, n)
+    ch_ = cf.transpose(0, 2, 1, 3).reshape(bsz * h, Lp, n)
+    ah = jnp.tile(a, bsz)
+    y = ssd_scan_call(xh, dth, ah, bh_, ch_, ck=ckk, interpret=interpret)
+    y = y.reshape(bsz, h, Lp, p).transpose(0, 2, 1, 3)
+    return y[:, :L]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the Mamba2 SSD scan: the sequential recurrence.
+
+Discretization (Mamba2, per head):
+    s_t = exp(dt_t * A) * s_{t-1} + dt_t * B_t x_t^T        s in R^{N x P}
+    y_t = C_t^T s_t                                          y in R^P
+
+A is a scalar per head (negative); dt_t > 0 (softplus upstream); B_t, C_t
+in R^N; x_t in R^P.  The D-skip and gating live in the model layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                 b: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """x: [BH, L, P]; dt: [BH, L]; a: [BH]; b, c: [BH, L, N] -> [BH, L, P]."""
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    a32 = a.astype(jnp.float32)
+
+    def per_head(x_h, dt_h, a_h, b_h, c_h):
+        n, p = b_h.shape[-1], x_h.shape[-1]
+
+        def step(s, inp):
+            xt, dtt, bt, ct = inp
+            lam = jnp.exp(dtt * a_h)
+            s = lam * s + dtt * (bt[:, None] * xt[None, :])
+            y = ct @ s
+            return s, y
+
+        s0 = jnp.zeros((n, p), jnp.float32)
+        _, ys = jax.lax.scan(step, s0, (x_h, dt_h, b_h, c_h))
+        return ys
+
+    ys = jax.vmap(per_head)(x32, dt32, a32, b32, c32)
+    return ys.astype(x.dtype)

@@ -1,0 +1,1 @@
+# launch layer: mesh factory, dry-run driver, train/serve entry points.

@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver builds the production mesh (16×16 single-pod /
+2×16×16 multi-pod over 512 placeholder host devices), constructs
+ShapeDtypeStruct inputs with NamedShardings (launch/specs.py — zero
+allocation), jits the cell's step function (train_step / prefill /
+serve_step), ``.lower().compile()``s it, and records:
+
+  * ``memory_analysis()``  — proves the per-device working set fits;
+  * ``cost_analysis()``    — HLO FLOPs + bytes for §Roofline;
+  * collective wire bytes  — parsed from the post-SPMD ``as_text()`` HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), per-device, with ring-algorithm wire factors.
+
+Results are cached as JSON per cell under ``results/dryrun/`` so reruns
+skip finished cells.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi_6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--force]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.configs.registry import ARCH_IDS
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import decode_specs, needs_fsdp, prefill_specs, train_specs
+from repro.models import decode_step, forward
+from repro.training.optimizer import AdamWConfig, adamw_update
+from repro.training.step import make_train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device wire bytes by collective type, from post-SPMD HLO.
+
+    Shapes in partitioned HLO are per-device.  Ring-algorithm factors:
+    all-gather ~= result bytes (receives G-1 of G shards), all-reduce ~=
+    2x bytes (reduce-scatter + all-gather phases), reduce-scatter ~=
+    input ~= result*G, all-to-all / permute ~= bytes.
+    """
+    totals: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = None
+        for op in ("all-reduce", "all-gather", "reduce-scatter",
+                   "all-to-all", "collective-permute"):
+            token = f" {op}(" if f" {op}(" in line else (
+                f" {op}-start(" if f" {op}-start(" in line else None)
+            if token:
+                m = op
+                break
+        if m is None or "=" not in line:
+            continue
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split("(")[0]
+        shapes = _TUPLE_RE.findall(lhs.split("=", 1)[1])
+        nbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes
+                     if dt in _DTYPE_BYTES)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = max(1, len([x for x in gm.group(1).split(",") if x.strip()]))
+        if m == "all-reduce":
+            wire = 2.0 * nbytes * max(g - 1, 1) / max(g, 1)
+        elif m == "all-gather":
+            wire = nbytes * max(g - 1, 1) / max(g, 1)
+        elif m == "reduce-scatter":
+            wire = nbytes * max(g - 1, 1)
+        else:
+            wire = float(nbytes)
+        totals[m] = totals.get(m, 0.0) + wire
+        count[m] = count.get(m, 0) + 1
+    totals["_count"] = sum(count.values())
+    totals["per_op_counts"] = count
+    return totals
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               fsdp: bool | None = None, variant: str = "baseline",
+               extra_cfg: dict | None = None):
+    """Build + lower + compile one cell; returns (result dict, compiled)."""
+    cfg = get_config(arch)
+    if extra_cfg:
+        cfg = cfg.with_(**extra_cfg)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" and shape.seq_len > 100_000 and not cfg.sub_quadratic:
+        return {"skipped": "long_500k needs sub-quadratic attention "
+                           "(full-attention arch; see DESIGN.md)"}, None
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+
+    t0 = time.time()
+    if shape.kind == "train":
+        params, opt, batch = train_specs(cfg, shape, mesh, fsdp=fsdp)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                from repro.models import train_loss
+                return train_loss(cfg, p, batch, remat=True)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state, gnorm = adamw_update(AdamWConfig(), params,
+                                                    grads, opt_state)
+            return params, opt_state, loss, gnorm
+
+        fn = jax.jit(train_step, donate_argnums=(0, 1))
+        args = (params, opt, batch)
+    elif shape.kind == "prefill":
+        params, batch = prefill_specs(cfg, shape, mesh, fsdp=fsdp)
+
+        def prefill_step(params, batch):
+            return forward(cfg, params, batch, mode="prefill", remat=False)
+
+        fn = jax.jit(prefill_step)
+        args = (params, batch)
+    else:
+        params, tokens, pos, cache = decode_specs(cfg, shape, mesh, fsdp=fsdp)
+
+        def serve_step(params, tokens, pos, cache):
+            return decode_step(cfg, params, tokens, pos, cache,
+                               absorbed_mla=(variant != "expand_mla"))
+
+        fn = jax.jit(serve_step, donate_argnums=(3,))
+        args = (params, tokens, pos, cache)
+
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0)
+            or getattr(mem, "temp_size_in_bytes", 0),
+        }
+    except Exception as e:  # CPU backend may not expose it
+        mem_d = {"error": str(e)}
+
+    coll = collective_bytes(compiled.as_text())
+    wire = sum(v for k, v in coll.items()
+               if k not in ("_count", "per_op_counts"))
+
+    flops = float(cost.get("flops", 0.0))           # per-device
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    # roofline terms (seconds); cost_analysis is per-device post-SPMD
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = wire / LINK_BW
+
+    model_flops = 6 * cfg.active_param_count() * shape.global_batch * (
+        shape.seq_len if shape.kind == "train" else 1)
+    if shape.kind == "prefill":
+        model_flops = 2 * cfg.active_param_count() * shape.global_batch * shape.seq_len
+    if shape.kind == "decode":
+        model_flops = 2 * cfg.active_param_count() * shape.global_batch
+
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    result = {
+        "arch": arch, "shape": shape_name, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "fsdp": bool(fsdp if fsdp is not None else needs_fsdp(cfg, mesh)),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops_per_device": flops, "bytes_per_device": bytes_acc,
+        "collective_wire_bytes_per_device": wire,
+        "collectives": coll,
+        "memory": mem_d,
+        "roofline": {
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+        },
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": (model_flops / (flops * chips)
+                               if flops else 0.0),
+    }
+    return result, compiled
+
+
+def run_composed(arch: str, shape_name: str, *, multi_pod: bool,
+                 variant: str = "baseline", fsdp=None) -> dict:
+    """Composed costing for cells whose fully-unrolled compile is
+    impractical on one CPU core (deepseek-236B train: 59 unrolled MoE
+    layers + backward).  Exact decomposition:
+
+      total = rolled + (L_scan - 1) x layer_body
+
+    where ``layer_body`` = delta between two small UNROLLED compiles
+    (L_scan = 2 vs 1 — identical top-level, one extra layer), and
+    ``rolled`` is the full-depth rolled-scan compile (counts the body once
+    and provides the real memory analysis + the compile-success proof).
+    """
+    cfg = get_config(arch)
+    fd = cfg.first_dense_layers
+    l_scan = cfg.n_layers - fd
+
+    def with_unroll(mode, **kw):
+        old = os.environ.get("REPRO_SCAN_UNROLL")
+        os.environ["REPRO_SCAN_UNROLL"] = mode
+        try:
+            r, _ = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                              variant=variant, fsdp=fsdp, **kw)
+        finally:
+            if old is None:
+                os.environ.pop("REPRO_SCAN_UNROLL", None)
+            else:
+                os.environ["REPRO_SCAN_UNROLL"] = old
+        return r
+
+    r1 = with_unroll("full", extra_cfg={"n_layers": fd + 1})
+    r2 = with_unroll("full", extra_cfg={"n_layers": fd + 2})
+    rolled = with_unroll("1")
+    if "skipped" in rolled:
+        return rolled
+
+    def combine(key):
+        layer = r2[key] - r1[key]
+        return rolled[key] + (l_scan - 1) * layer
+
+    flops = combine("flops_per_device")
+    bytes_acc = combine("bytes_per_device")
+    wire = combine("collective_wire_bytes_per_device")
+    out = dict(rolled)
+    out["method"] = "composed(rolled + (L-1)*layer_delta)"
+    out["variant"] = variant
+    out["flops_per_device"] = flops
+    out["bytes_per_device"] = bytes_acc
+    out["collective_wire_bytes_per_device"] = wire
+    t_c, t_m, t_x = (flops / PEAK_FLOPS, bytes_acc / HBM_BW, wire / LINK_BW)
+    out["roofline"] = {
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": max((("compute", t_c), ("memory", t_m),
+                         ("collective", t_x)), key=lambda kv: kv[1])[0],
+    }
+    chips = rolled["chips"]
+    out["useful_flops_ratio"] = (out["model_flops_global"] / (flops * chips)
+                                 if flops else 0.0)
+    return out
+
+
+def cell_path(arch, shape_name, multi_pod, variant="baseline") -> Path:
+    mesh = "multi" if multi_pod else "single"
+    return RESULTS_DIR / f"{arch}__{shape_name}__{mesh}__{variant}.json"
+
+
+def run_cell(arch, shape_name, multi_pod, force=False, variant="baseline",
+             fsdp=None, extra_cfg=None, composed=False) -> dict:
+    out = cell_path(arch, shape_name, multi_pod, variant)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+    try:
+        if composed:
+            result = run_composed(arch, shape_name, multi_pod=multi_pod,
+                                  variant=variant, fsdp=fsdp)
+        else:
+            result, _ = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                   variant=variant, fsdp=fsdp,
+                                   extra_cfg=extra_cfg)
+    except Exception:
+        result = {"arch": arch, "shape": shape_name,
+                  "mesh": "2x16x16" if multi_pod else "16x16",
+                  "error": traceback.format_exc(limit=8)}
+    out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--composed", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    for arch, shape, mp in cells:
+        t0 = time.time()
+        r = run_cell(arch, shape, mp, force=args.force, variant=args.variant,
+                     composed=args.composed)
+        status = ("SKIP " + r.get("skipped", "")) if "skipped" in r else (
+            "ERROR" if "error" in r else
+            f"ok dom={r['roofline']['dominant']} "
+            f"tc={r['roofline']['t_compute_s']:.3e} "
+            f"tm={r['roofline']['t_memory_s']:.3e} "
+            f"tx={r['roofline']['t_collective_s']:.3e}")
+        print(f"[{time.time()-t0:7.1f}s] {arch:18s} {shape:12s} "
+              f"{'2x16x16' if mp else '16x16':8s} {status}", flush=True)
+        if "error" in r:
+            print(r["error"], flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production mesh factory.
+
+(16, 16) ``("data", "model")`` per pod; the multi-pod config adds a leading
+"pod" axis — (2, 16, 16) = 512 chips.  A function (not a module constant)
+so importing never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Elastic variant: any (data, model) factorization of the available
+    devices — restore/reshard uses this after a fleet resize."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,161 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's inputs.
+
+``input_specs(cfg, shape, mesh)`` returns (args, kwargs-free) SDS pytrees
+with NamedShardings attached, for the step function the cell lowers:
+  train   -> (params, opt_state, batch)
+  prefill -> (params, batch)
+  decode  -> (params, tokens, pos, cache)
+No device allocation happens anywhere (params/caches via jax.eval_shape).
+Modality frontends are STUBS per the assignment: whisper gets precomputed
+frame embeddings, qwen2-vl gets M-RoPE positions (and its patch embeddings
+would arrive pre-mixed into the token stream).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeSpec
+from repro.distributed.sharding import (batch_axes, cache_specs,
+                                        decode_input_specs, param_specs,
+                                        train_batch_specs, zero1_specs)
+from repro.models import init_cache, init_model
+from repro.training.optimizer import init_opt_state
+
+FSDP_THRESHOLD_BYTES = 4 << 30   # shard params over 'data' too beyond this
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def sanitize_spec(mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop shardings on dims the mesh axes don't divide (e.g. whisper's
+    51865 vocab over a 16-wide model axis) — those dims replicate and the
+    roofline table shows the cost."""
+    out = []
+    for i, entry in enumerate(spec):
+        if i >= len(shape) or entry is None:
+            out.append(None)
+            continue
+        if shape[i] % _axis_size(mesh, entry) == 0:
+            out.append(entry)
+        elif isinstance(entry, tuple):
+            # try progressively shorter prefixes of the axis tuple
+            kept = None
+            for j in range(len(entry) - 1, 0, -1):
+                sub = entry[:j]
+                if shape[i] % _axis_size(mesh, sub) == 0:
+                    kept = sub
+                    break
+            out.append(kept)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _sds(tree_shape, spec_tree, mesh):
+    def mk(leaf, spec):
+        spec = sanitize_spec(mesh, spec, leaf.shape)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(mk, tree_shape, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def params_shape(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(init_model, cfg), key)
+
+
+def needs_fsdp(cfg: ModelConfig, mesh) -> bool:
+    model = mesh.shape.get("model", 1)
+    bytes_per_model_shard = cfg.param_count() * 2 / model
+    return bytes_per_model_shard > FSDP_THRESHOLD_BYTES
+
+
+def make_param_specs(cfg: ModelConfig, mesh, *, fsdp: bool | None = None):
+    pshape = params_shape(cfg)
+    if fsdp is None:
+        fsdp = needs_fsdp(cfg, mesh)
+    if fsdp:
+        return pshape, zero1_specs(cfg, pshape, mesh)   # fold 'data' in too
+    return pshape, param_specs(cfg, pshape)
+
+
+def _batch_spec_tree(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["encoder_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.param_dtype))
+    if cfg.mrope_sections:
+        batch["positions"] = jax.ShapeDtypeStruct((b, s, 3), jnp.int32)
+    return batch
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                fsdp: bool | None = None):
+    pshape, pspec = make_param_specs(cfg, mesh, fsdp=fsdp)
+    params = _sds(pshape, pspec, mesh)
+    oshape = jax.eval_shape(init_opt_state, pshape)
+    ospec = {"m": zero1_specs(cfg, pshape, mesh),
+             "v": zero1_specs(cfg, pshape, mesh),
+             "step": P()}
+    opt = _sds(oshape, ospec, mesh)
+    bspec = train_batch_specs(cfg, mesh)
+    batch_shape = _batch_spec_tree(cfg, shape, mesh)
+    if "positions" not in batch_shape:
+        bspec.pop("positions", None)
+    batch = _sds(batch_shape, bspec, mesh)
+    return params, opt, batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                  fsdp: bool | None = None):
+    pshape, pspec = make_param_specs(cfg, mesh, fsdp=fsdp)
+    params = _sds(pshape, pspec, mesh)
+    batch_shape = _batch_spec_tree(cfg, shape, mesh)
+    batch_shape.pop("labels")
+    bspec = train_batch_specs(cfg, mesh)
+    bspec.pop("labels")
+    if "positions" not in batch_shape:
+        bspec.pop("positions", None)
+    batch = _sds(batch_shape, bspec, mesh)
+    return params, batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+                 fsdp: bool | None = None):
+    pshape, pspec = make_param_specs(cfg, mesh, fsdp=fsdp)
+    params = _sds(pshape, pspec, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    cshape = jax.eval_shape(functools.partial(init_cache, cfg, b, s))
+    ba = batch_axes(mesh)
+    n_batch_shards = 1
+    for a in ba:
+        n_batch_shards *= mesh.shape[a]
+    batch1 = b < n_batch_shards
+    cspec = cache_specs(cfg, mesh, batch1=batch1)
+    if batch1:
+        tok_spec = {"tokens": P(None, None), "pos": P(None)}
+    else:
+        tok_spec = decode_input_specs(cfg, mesh)
+    cache = _sds(cshape, cspec, mesh)
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32,
+                                  sharding=NamedSharding(mesh, tok_spec["tokens"]))
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32,
+                               sharding=NamedSharding(mesh, tok_spec["pos"]))
+    return params, tokens, pos, cache

@@ -1,0 +1,7 @@
+"""Functional-JAX model zoo for the 10 assigned architectures."""
+
+from .blocks import encode, forward, init_model, train_loss
+from .decode import decode_step, init_cache
+
+__all__ = ["decode_step", "encode", "forward", "init_cache", "init_model",
+           "train_loss"]

@@ -1,0 +1,133 @@
+"""GQA attention (qwen/llama/gemma/yi families): init + train/prefill/decode.
+
+The jnp path is the default (XLA fuses it, and the dry-run's
+``cost_analysis`` then reflects true FLOPs); the Pallas flash kernel is the
+TPU execution path, selectable with ``use_pallas=True`` (validated against
+the same reference in tests).  Sliding windows arrive as *traced* per-layer
+scalars so gemma3's 5:1 local:global pattern stays scannable — a window of
+-1 means global.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, dtype_of, norm, norm_params, rms_norm, split_keys
+
+
+def init_attn(cfg, key) -> dict:
+    d = cfg.d_model
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, 6)
+    dt = dtype_of(cfg)
+    p = {
+        "wq": dense_init(ks[0], (d, h * dh), dt),
+        "wk": dense_init(ks[1], (d, hk * dh), dt),
+        "wv": dense_init(ks[2], (d, hk * dh), dt),
+        "wo": dense_init(ks[3], (h * dh, d), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def _project_qkv(cfg, p, x, positions, theta):
+    b, s, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, hk, dh)
+    v = (x @ p["wv"]).reshape(b, s, hk, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def _sdpa(q, k, v, *, causal: bool, window, q_offset=0):
+    """q: [B,S,H,Dh]; k,v: [B,T,Hk,Dh]; window: traced scalar, -1=global."""
+    b, s, h, dh = q.shape
+    t = k.shape[1]
+    hk = k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, s, hk, g, dh)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (dh ** -0.5)
+    qi = (jnp.arange(s) + q_offset)[:, None]
+    kj = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kj <= qi
+    w = jnp.asarray(window)
+    mask &= jnp.where(w < 0, True, (qi - kj) < w)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def attn_forward(cfg, p, x, positions, theta, window,
+                 *, use_pallas: bool = False):
+    """Full-sequence causal attention (train / prefill).  Returns
+    (out [B,S,D], (k, v) for cache)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions, theta)
+    if use_pallas:
+        from repro.kernels.flash_attention import flash_attention
+        win = int(window) if int(window) > 0 else None
+        o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=True, window=win)
+        o = o.transpose(0, 2, 1, 3)
+    else:
+        o = _sdpa(q, k, v, causal=True, window=window)
+    out = o.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return out, (k, v)
+
+
+def attn_decode(cfg, p, x, pos, theta, window, k_cache, v_cache):
+    """Single-step decode.  x: [B,1,D]; pos: [B] current index;
+    k_cache/v_cache: [B, Smax, Hk, Dh].  Returns (out, k_cache, v_cache)."""
+    b = x.shape[0]
+    positions = pos[:, None]                                   # [B,1]
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+    q, k, v = _project_qkv(cfg, p, x, positions, theta)
+    k_cache = jax.vmap(
+        lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+    )(k_cache, k, pos)
+    v_cache = jax.vmap(
+        lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0))
+    )(v_cache, v, pos)
+    t = k_cache.shape[1]
+    hk, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, 1, hk, g, cfg.head_dim)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * (cfg.head_dim ** -0.5)
+    kj = jnp.arange(t)[None, :]
+    mask = kj <= pos[:, None]                                  # [B, T]
+    w = jnp.asarray(window)
+    mask &= jnp.where(w < 0, True, (pos[:, None] - kj) < w)
+    logits = jnp.where(mask[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", probs,
+                   v_cache.astype(jnp.float32)).astype(x.dtype)
+    out = o.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return out, k_cache, v_cache
+
+
+def init_block_norms(cfg, key) -> dict:
+    del key
+    p = {"attn_norm": norm_params(cfg, cfg.d_model),
+         "mlp_norm": norm_params(cfg, cfg.d_model)}
+    if cfg.post_norm:
+        p["post_attn_norm"] = norm_params(cfg, cfg.d_model)
+        p["post_mlp_norm"] = norm_params(cfg, cfg.d_model)
+    return p
+
+
+def block_norm(cfg, p, name, x):
+    return norm(cfg, x, p[name])

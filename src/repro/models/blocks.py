@@ -1,0 +1,452 @@
+"""Model assembly: init / forward / decode for all four families.
+
+Layer stacks are **scanned** (params stacked on a leading axis) so the
+512-device dry-run compiles a single layer body instead of 60 copies;
+heterogeneous per-layer attributes (gemma3's 5:1 local:global windows and
+dual RoPE theta) ride through the scan as traced per-layer scalars.
+Training wraps the scan body in ``jax.checkpoint`` (remat policy is a
+§Perf knob).
+
+Families:
+  decoder — GQA or MLA attention × SwiGLU or MoE MLP (llama/gemma/yi/qwen/
+            qwen-vl/deepseek); DS-V2's first dense layer is unrolled.
+  ssm     — pure Mamba2 (SSD) stack.
+  hybrid  — Mamba2 backbone with ONE shared attention block applied every
+            ``attn_every`` layers (zamba2), each application with its own
+            KV cache.
+  encdec  — whisper backbone: bidirectional encoder over stub frame
+            embeddings + causal decoder with cross-attention.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssd as ssd_mod
+from .common import (dense_init, dtype_of, norm, norm_params, scan_layers,
+                     sinusoidal_positions, split_keys)
+
+Params = dict
+Cache = dict
+
+
+# ===================================================================== init
+def init_model(cfg, key) -> Params:
+    if cfg.family == "encdec":
+        return _init_encdec(cfg, key)
+    ks = split_keys(key, 8)
+    dt = dtype_of(cfg)
+    p: Params = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "final_norm": norm_params(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dt)
+
+    if cfg.family in ("ssm", "hybrid"):
+        n_scan = cfg.n_layers
+        p["layers"] = _stack_init(
+            lambda k: _init_ssm_block(cfg, k), ks[2], n_scan)
+        if cfg.attn_every:
+            p["shared_attn"] = _init_attn_block(cfg, ks[3])
+        return p
+
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    p["layers"] = _stack_init(lambda k: _init_decoder_block(cfg, k, dense=False),
+                              ks[2], n_scan)
+    for i in range(cfg.first_dense_layers):
+        p[f"dense{i}"] = _init_decoder_block(cfg, ks[4 + i], dense=True)
+    return p
+
+
+def _stack_init(fn, key, n: int) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def _init_decoder_block(cfg, key, dense: bool) -> Params:
+    ks = split_keys(key, 3)
+    p = attn.init_block_norms(cfg, ks[0])
+    if cfg.attn_kind == "mla":
+        p["attn"] = mla_mod.init_mla(cfg, ks[1])
+    else:
+        p["attn"] = attn.init_attn(cfg, ks[1])
+    if cfg.mlp_kind == "moe" and not dense:
+        p["mlp"] = moe_mod.init_moe(cfg, ks[2])
+    else:
+        d_ff = cfg.dense_d_ff if (dense and cfg.dense_d_ff) else cfg.d_ff
+        p["mlp"] = moe_mod.init_mlp(cfg, ks[2], d_ff=d_ff)
+    return p
+
+
+def _init_ssm_block(cfg, key) -> Params:
+    ks = split_keys(key, 2)
+    return {"norm": norm_params(cfg, cfg.d_model),
+            "ssd": ssd_mod.init_ssd(cfg, ks[0])}
+
+
+def _init_attn_block(cfg, key) -> Params:
+    """zamba2's shared transformer block (attention + MLP)."""
+    ks = split_keys(key, 3)
+    return {"attn_norm": norm_params(cfg, cfg.d_model),
+            "mlp_norm": norm_params(cfg, cfg.d_model),
+            "attn": attn.init_attn(cfg, ks[0]),
+            "mlp": moe_mod.init_mlp(cfg, ks[1], d_ff=cfg.d_ff)}
+
+
+def _init_encdec(cfg, key) -> Params:
+    ks = split_keys(key, 6)
+    dt = dtype_of(cfg)
+    p: Params = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "final_norm": norm_params(cfg, cfg.d_model),
+        "enc_final_norm": norm_params(cfg, cfg.d_model),
+    }
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"attn_norm": norm_params(cfg, cfg.d_model),
+                "mlp_norm": norm_params(cfg, cfg.d_model),
+                "attn": attn.init_attn(cfg, k1),
+                "mlp": moe_mod.init_mlp(cfg, k2)}
+    def dec_block(k):
+        k1, k2, k3 = split_keys(k, 3)
+        return {"attn_norm": norm_params(cfg, cfg.d_model),
+                "cross_norm": norm_params(cfg, cfg.d_model),
+                "mlp_norm": norm_params(cfg, cfg.d_model),
+                "attn": attn.init_attn(cfg, k1),
+                "cross": attn.init_attn(cfg, k2),
+                "mlp": moe_mod.init_mlp(cfg, k3)}
+    p["encoder"] = _stack_init(enc_block, ks[1], cfg.enc_layers)
+    p["layers"] = _stack_init(dec_block, ks[2], cfg.n_layers)
+    return p
+
+
+# ================================================================ per-layer
+def _layer_meta(cfg):
+    """Traced per-layer (theta, window) arrays for the scan."""
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    thetas = np.full(cfg.n_layers, cfg.rope_theta, np.float32)
+    if cfg.rope_theta_global is not None:
+        for i, w in enumerate(cfg.layer_windows()):
+            if w < 0:
+                thetas[i] = cfg.rope_theta_global
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    return (jnp.asarray(thetas[cfg.first_dense_layers:]),
+            windows[cfg.first_dense_layers:],
+            jnp.asarray(thetas[:cfg.first_dense_layers]),
+            windows[:cfg.first_dense_layers],
+            n_scan)
+
+
+def _decoder_block_fwd(cfg, p, h, positions, theta, window, *, dense: bool,
+                       use_pallas: bool):
+    aux = jnp.zeros((), jnp.float32)
+    a_in = norm(cfg, h, p["attn_norm"])
+    if cfg.attn_kind == "mla":
+        a_out, kv = mla_mod.mla_forward(cfg, p["attn"], a_in, positions)
+    else:
+        a_out, kv = attn.attn_forward(cfg, p["attn"], a_in, positions, theta,
+                                      window, use_pallas=use_pallas)
+    if cfg.post_norm:
+        a_out = norm(cfg, a_out, p["post_attn_norm"])
+    h = h + a_out
+    m_in = norm(cfg, h, p["mlp_norm"])
+    if cfg.mlp_kind == "moe" and not dense:
+        m_out, aux = moe_mod.moe_forward(cfg, p["mlp"], m_in)
+    else:
+        m_out = moe_mod.mlp_forward(cfg, p["mlp"], m_in)
+    if cfg.post_norm:
+        m_out = norm(cfg, m_out, p["post_mlp_norm"])
+    return h + m_out, kv, aux
+
+
+def _remat_policy():
+    """Activation-checkpoint policy, env-selectable for §Perf sweeps:
+    REPRO_REMAT = nothing (default, min memory) | dots (save matmul
+    outputs, ~25% less recompute) | none."""
+    import os
+    mode = os.environ.get("REPRO_REMAT", "nothing")
+    if mode == "dots":
+        return jax.checkpoint_policies.dots_saveable
+    if mode == "none":
+        return jax.checkpoint_policies.everything_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+# ================================================================== forward
+def forward(cfg, params: Params, batch: dict, *, mode: str = "train",
+            use_pallas: bool = False, remat: bool = True,
+            cache_len: int | None = None) -> Any:
+    """mode='train': returns (logits, aux).  mode='prefill': returns
+    (last_logits, cache) with KV caches sized ``cache_len or S``."""
+    assert mode in ("train", "prefill")
+    if cfg.family == "encdec":
+        return _encdec_forward(cfg, params, batch, mode=mode, remat=remat,
+                               cache_len=cache_len)
+    if cfg.family in ("ssm", "hybrid"):
+        return _ssm_forward(cfg, params, batch, mode=mode, remat=remat,
+                            cache_len=cache_len, use_pallas=use_pallas)
+
+    tokens = batch.get("tokens")
+    if tokens is not None:
+        h = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        h = batch["embeds"]
+    b, s = h.shape[0], h.shape[1]
+    if cfg.name.startswith("gemma"):
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+
+    thetas, windows, d_thetas, d_windows, n_scan = _layer_meta(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    dense_caches = []
+    for i in range(cfg.first_dense_layers):
+        h, kv, aux = _decoder_block_fwd(
+            cfg, params[f"dense{i}"], h, positions, d_thetas[i], d_windows[i],
+            dense=True, use_pallas=use_pallas)
+        aux_total += aux
+        dense_caches.append(kv)
+
+    want_cache = mode == "prefill"
+
+    def body(carry, xs):
+        h, aux_acc = carry
+        lp, theta, window = xs
+        h, kv, aux = _decoder_block_fwd(cfg, lp, h, positions, theta, window,
+                                        dense=False, use_pallas=use_pallas)
+        return (h, aux_acc + aux), (kv if want_cache else 0)
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body, policy=_remat_policy())
+    (h, aux_total), kvs = scan_layers(
+        body, (h, aux_total), (params["layers"], thetas, windows))
+
+    h = norm(cfg, h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    if mode == "train":
+        logits = h @ head
+        return logits, aux_total
+
+    logits = h[:, -1:] @ head           # prefill: only the last position
+    cache = _pack_prefill_cache(cfg, kvs, dense_caches, s, cache_len)
+    return logits, cache
+
+
+def _pack_prefill_cache(cfg, kvs, dense_caches, s: int,
+                        cache_len: int | None) -> Cache:
+    cache: Cache = {}
+    target = cache_len or s
+
+    def grow(x, axis):
+        if target == s:
+            return x
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, target - s)
+        return jnp.pad(x, pad)
+
+    if cfg.attn_kind == "mla":
+        ckv, kr = kvs
+        cache["ckv"] = grow(ckv, 2)      # [L, B, S, lora]
+        cache["kr"] = grow(kr, 2)
+        if dense_caches:
+            cache["d_ckv"] = grow(jnp.stack([c[0] for c in dense_caches]), 2)
+            cache["d_kr"] = grow(jnp.stack([c[1] for c in dense_caches]), 2)
+    else:
+        k, v = kvs
+        cache["k"] = grow(k, 2)          # [L, B, S, Hk, Dh]
+        cache["v"] = grow(v, 2)
+    cache["pos"] = jnp.full((1,), s, jnp.int32)
+    return cache
+
+
+# ============================================================ ssm / hybrid
+def _ssm_block_fwd(cfg, p, h, *, want_state: bool, use_pallas: bool):
+    a_in = norm(cfg, h, p["norm"])
+    out, conv_tail = ssd_mod.ssd_forward(cfg, p["ssd"], a_in,
+                                         use_pallas=use_pallas)
+    state = (ssd_mod.ssd_final_state(cfg, p["ssd"], a_in)
+             if want_state else jnp.zeros((), jnp.float32))
+    return h + out, conv_tail, state
+
+
+def _shared_attn_fwd(cfg, p, h, positions, *, use_pallas: bool):
+    a_in = norm(cfg, h, p["attn_norm"])
+    a_out, kv = attn.attn_forward(cfg, p["attn"], a_in, positions,
+                                  cfg.rope_theta, jnp.int32(-1),
+                                  use_pallas=use_pallas)
+    h = h + a_out
+    m_in = norm(cfg, h, p["mlp_norm"])
+    return h + moe_mod.mlp_forward(cfg, p["mlp"], m_in), kv
+
+
+def _ssm_forward(cfg, params, batch, *, mode, remat, cache_len,
+                 use_pallas: bool):
+    tokens = batch["tokens"]
+    h = jnp.take(params["embed"], tokens, axis=0)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    want_cache = mode == "prefill"
+
+    def body(carry, lp):
+        h, aux = carry
+        h, conv_tail, state = _ssm_block_fwd(cfg, lp, h,
+                                             want_state=want_cache,
+                                             use_pallas=use_pallas)
+        out = (conv_tail, state) if want_cache else 0
+        return (h, aux), out
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body, policy=_remat_policy())
+
+    aux0 = jnp.zeros((), jnp.float32)
+    attn_kvs = []
+    if cfg.attn_every:
+        layers = params["layers"]
+        n = cfg.n_layers
+        outs = []
+        pos_cursor = 0
+        for seg_start in range(0, n, cfg.attn_every):
+            seg_end = min(seg_start + cfg.attn_every, n)
+            seg = jax.tree.map(lambda x: x[seg_start:seg_end], layers)
+            (h, aux0), out = scan_layers(body, (h, aux0), seg)
+            if want_cache:
+                outs.append(out)
+            if seg_end < n:
+                h, kv = _shared_attn_fwd(cfg, params["shared_attn"], h,
+                                         positions, use_pallas=use_pallas)
+                attn_kvs.append(kv)
+        del pos_cursor
+        if want_cache:
+            conv = jnp.concatenate([o[0] for o in outs], axis=0)
+            state = jnp.concatenate([o[1] for o in outs], axis=0)
+            kvs = (conv, state)
+    else:
+        (h, aux0), kvs = scan_layers(body, (h, aux0), params["layers"])
+
+    h = norm(cfg, h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if mode == "train":
+        return h @ head, aux0
+
+    logits = h[:, -1:] @ head
+    conv, state = kvs
+    cache: Cache = {"conv": conv, "state": state,
+                    "pos": jnp.full((1,), s, jnp.int32)}
+    if cfg.attn_every and attn_kvs:
+        target = cache_len or s
+        k = jnp.stack([kv[0] for kv in attn_kvs])
+        v = jnp.stack([kv[1] for kv in attn_kvs])
+        if target != s:
+            pad = [(0, 0)] * k.ndim
+            pad[2] = (0, target - s)
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        cache["attn_k"], cache["attn_v"] = k, v
+    return logits, cache
+
+
+# ================================================================== encdec
+def _enc_block_fwd(cfg, p, h):
+    a_in = norm(cfg, h, p["attn_norm"])
+    b, s, _ = a_in.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    # bidirectional self-attention (no causal mask)
+    q, k, v = attn._project_qkv(cfg, p["attn"], a_in, positions, cfg.rope_theta)
+    o = attn._sdpa(q, k, v, causal=False, window=jnp.int32(-1))
+    a_out = o.reshape(b, s, -1) @ p["attn"]["wo"]
+    h = h + a_out
+    m_in = norm(cfg, h, p["mlp_norm"])
+    return h + moe_mod.mlp_forward(cfg, p["mlp"], m_in)
+
+
+def _cross_attn(cfg, p, x, enc_k, enc_v):
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    o = attn._sdpa(q, enc_k, enc_v, causal=False, window=jnp.int32(-1))
+    return o.reshape(b, s, h * dh) @ p["wo"]
+
+
+def encode(cfg, params, enc_embeds):
+    """Run the encoder over stub frame embeddings: [B, T, D] -> [B, T, D]."""
+    h = enc_embeds + sinusoidal_positions(
+        enc_embeds.shape[1], cfg.d_model).astype(enc_embeds.dtype)[None]
+
+    def body(h, lp):
+        return _enc_block_fwd(cfg, lp, h), 0
+
+    h, _ = scan_layers(body, h, params["encoder"])
+    return norm(cfg, h, params["enc_final_norm"])
+
+
+def _encdec_forward(cfg, params, batch, *, mode, remat, cache_len):
+    tokens = batch["tokens"]
+    enc_out = encode(cfg, params, batch["encoder_embeds"])
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = h + sinusoidal_positions(s, cfg.d_model).astype(h.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    want_cache = mode == "prefill"
+
+    def body(carry, lp):
+        h = carry
+        a_in = norm(cfg, h, lp["attn_norm"])
+        a_out, kv = attn.attn_forward(cfg, lp["attn"], a_in, positions,
+                                      cfg.rope_theta, jnp.int32(-1))
+        h = h + a_out
+        c_in = norm(cfg, h, lp["cross_norm"])
+        ck = (enc_out @ lp["cross"]["wk"]).reshape(
+            b, -1, cfg.n_kv_heads, cfg.head_dim)
+        cv = (enc_out @ lp["cross"]["wv"]).reshape(
+            b, -1, cfg.n_kv_heads, cfg.head_dim)
+        h = h + _cross_attn(cfg, lp["cross"], c_in, ck, cv)
+        m_in = norm(cfg, h, lp["mlp_norm"])
+        h = h + moe_mod.mlp_forward(cfg, lp["mlp"], m_in)
+        return h, ((kv, (ck, cv)) if want_cache else 0)
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body, policy=_remat_policy())
+    h, kvs = scan_layers(body, h, params["layers"])
+    h = norm(cfg, h, params["final_norm"])
+    logits_head = params["embed"].T
+
+    if mode == "train":
+        return h @ logits_head, jnp.zeros((), jnp.float32)
+
+    logits = h[:, -1:] @ logits_head
+    (k, v), (ck, cv) = kvs
+    target = cache_len or s
+    if target != s:
+        pad = [(0, 0)] * k.ndim
+        pad[2] = (0, target - s)
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    cache = {"k": k, "v": v, "cross_k": ck, "cross_v": cv,
+             "pos": jnp.full((1,), s, jnp.int32)}
+    return logits, cache
+
+
+# ==================================================================== loss
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas", "remat"))
+def train_loss(cfg, params, batch, *, use_pallas: bool = False,
+               remat: bool = True):
+    logits, aux = forward(cfg, params, batch, mode="train",
+                          use_pallas=use_pallas, remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1)
+    return nll + 0.01 * aux

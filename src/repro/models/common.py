@@ -1,0 +1,115 @@
+"""Shared model components: norms, RoPE (incl. M-RoPE and per-layer theta),
+sinusoidal positions, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+def scan_layers(body, carry, xs, length: int | None = None):
+    """lax.scan with env-controlled unrolling.
+
+    XLA's cost analysis counts a while-loop body ONCE regardless of trip
+    count, which would hide ~n_layers of FLOPs/bytes from the roofline.
+    The dry-run sets REPRO_SCAN_UNROLL=full so layer stacks unroll and the
+    compiled module's cost_analysis reflects every layer; normal execution
+    keeps the rolled loop (compact HLO, fast compiles).
+    """
+    import os
+    mode = os.environ.get("REPRO_SCAN_UNROLL", "1")
+    n = length if length is not None else jax.tree_util.tree_leaves(xs)[0].shape[0]
+    unroll = n if mode == "full" else max(1, min(int(mode), n))
+    return jax.lax.scan(body, carry, xs, unroll=unroll)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+             plus_one: bool = False) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (y * scale).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(cfg, x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps, plus_one=(cfg.name.startswith("gemma")))
+
+
+def norm_params(cfg, d: int) -> dict:
+    if cfg.norm_type == "layernorm":
+        return {"w": jnp.ones((d,), dtype_of(cfg)),
+                "b": jnp.zeros((d,), dtype_of(cfg))}
+    init = jnp.zeros if cfg.name.startswith("gemma") else jnp.ones
+    return {"w": init((d,), dtype_of(cfg))}
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: jnp.ndarray | float) -> jnp.ndarray:
+    """[head_dim/2] inverse frequencies; theta may be a traced scalar
+    (per-layer theta for gemma3's local/global split)."""
+    half = head_dim // 2
+    exponent = jnp.arange(half, dtype=jnp.float32) / half
+    return 1.0 / (jnp.asarray(theta, jnp.float32) ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: jnp.ndarray | float,
+               mrope_sections: tuple[int, ...] = ()) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S] (or [B, S, 3] for M-RoPE)."""
+    b, s, h, d = x.shape
+    inv = rope_freqs(d, theta)                       # [d/2]
+    if mrope_sections:
+        assert positions.ndim == 3
+        sec = np.cumsum((0,) + tuple(mrope_sections))
+        assert sec[-1] == d // 2
+        sel = np.zeros(d // 2, np.int32)
+        for i in range(len(mrope_sections)):
+            sel[sec[i]:sec[i + 1]] = i
+        pos = positions.astype(jnp.float32)[..., jnp.asarray(sel)]  # [B,S,d/2]
+        ang = pos * inv[None, None, :]
+    else:
+        if positions.ndim == 3:
+            positions = positions[..., 0]
+        ang = positions.astype(jnp.float32)[:, :, None] * inv[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]                # [B, S, 1, d/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(s: int, d: int) -> jnp.ndarray:
+    """Whisper-style absolute sinusoidal embedding [S, D]."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ------------------------------------------------------------- init utils
+def dense_init(key, shape, dtype, scale: float | None = None) -> jnp.ndarray:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,234 @@
+"""Single-step decode (``serve_step``) + cache constructors for all families.
+
+The decode path is what the ``decode_32k`` / ``long_500k`` shapes lower:
+one new token against a cache of ``max_seq``.  Cache layout is scan-stacked
+([L, B, ...]) so the layer loop stays a single compiled body.
+
+``init_cache`` builds the zeroed cache pytree; the launch layer calls it
+under ``jax.eval_shape`` for the dry-run (no allocation) and for real in
+the serving example.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssd as ssd_mod
+from .blocks import _layer_meta
+from .common import dtype_of, norm, scan_layers
+
+
+# ============================================================= cache build
+def init_cache(cfg, batch: int, max_seq: int):
+    dt = dtype_of(cfg)
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    if cfg.family in ("ssm", "hybrid"):
+        cache = {
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_kernel - 1,
+                               ssd_mod.conv_dim(cfg)), dt),
+            "state": jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads,
+                                cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+            "pos": jnp.zeros((1,), jnp.int32),
+        }
+        if cfg.attn_every:
+            n_apps = len(range(cfg.attn_every, cfg.n_layers, cfg.attn_every))
+            cache["attn_k"] = jnp.zeros(
+                (n_apps, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt)
+            cache["attn_v"] = jnp.zeros_like(cache["attn_k"])
+        return cache
+    if cfg.family == "encdec":
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dt),
+            "cross_k": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq,
+                                  cfg.n_kv_heads, cfg.head_dim), dt),
+            "cross_v": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq,
+                                  cfg.n_kv_heads, cfg.head_dim), dt),
+            "pos": jnp.zeros((1,), jnp.int32),
+        }
+    if cfg.attn_kind == "mla":
+        cache = {
+            "ckv": jnp.zeros((n_scan, batch, max_seq, cfg.kv_lora_rank), dt),
+            "kr": jnp.zeros((n_scan, batch, max_seq, cfg.qk_rope_dim), dt),
+            "pos": jnp.zeros((1,), jnp.int32),
+        }
+        if cfg.first_dense_layers:
+            cache["d_ckv"] = jnp.zeros(
+                (cfg.first_dense_layers, batch, max_seq, cfg.kv_lora_rank), dt)
+            cache["d_kr"] = jnp.zeros(
+                (cfg.first_dense_layers, batch, max_seq, cfg.qk_rope_dim), dt)
+        return cache
+    return {
+        "k": jnp.zeros((n_scan, batch, max_seq, cfg.n_kv_heads,
+                        cfg.head_dim), dt),
+        "v": jnp.zeros((n_scan, batch, max_seq, cfg.n_kv_heads,
+                        cfg.head_dim), dt),
+        "pos": jnp.zeros((1,), jnp.int32),
+    }
+
+
+# ============================================================== decode step
+def decode_step(cfg, params, tokens, pos, cache, *, batch_extras=None,
+                absorbed_mla: bool = True):
+    """tokens: [B, 1] int32; pos: [B] int32 write index; cache: pytree.
+    Returns (logits [B, 1, V], new_cache)."""
+    if cfg.family in ("ssm", "hybrid"):
+        return _decode_ssm(cfg, params, tokens, pos, cache)
+    if cfg.family == "encdec":
+        return _decode_encdec(cfg, params, tokens, pos, cache)
+    return _decode_decoder(cfg, params, tokens, pos, cache,
+                           absorbed_mla=absorbed_mla)
+
+
+def _mlp_step(cfg, lp, h, dense: bool):
+    m_in = norm(cfg, h, lp["mlp_norm"])
+    if cfg.mlp_kind == "moe" and not dense:
+        m_out, _aux = moe_mod.moe_forward(cfg, lp["mlp"], m_in)
+    else:
+        m_out = moe_mod.mlp_forward(cfg, lp["mlp"], m_in)
+    if cfg.post_norm:
+        m_out = norm(cfg, m_out, lp["post_mlp_norm"])
+    return h + m_out
+
+
+def _decode_decoder(cfg, params, tokens, pos, cache, *, absorbed_mla):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    thetas, windows, d_thetas, d_windows, _ = _layer_meta(cfg)
+    new_cache = dict(cache)
+
+    for i in range(cfg.first_dense_layers):
+        lp = params[f"dense{i}"]
+        a_in = norm(cfg, h, lp["attn_norm"])
+        if cfg.attn_kind == "mla":
+            a_out, ckv, kr = mla_mod.mla_decode(
+                cfg, lp["attn"], a_in, pos, cache["d_ckv"][i],
+                cache["d_kr"][i], absorbed=absorbed_mla)
+            new_cache["d_ckv"] = new_cache["d_ckv"].at[i].set(ckv)
+            new_cache["d_kr"] = new_cache["d_kr"].at[i].set(kr)
+        else:
+            a_out, k, v = attn.attn_decode(
+                cfg, lp["attn"], a_in, pos, d_thetas[i], d_windows[i],
+                cache["k"][i], cache["v"][i])
+            new_cache["k"] = new_cache["k"].at[i].set(k)
+            new_cache["v"] = new_cache["v"].at[i].set(v)
+        if cfg.post_norm:
+            a_out = norm(cfg, a_out, lp["post_attn_norm"])
+        h = _mlp_step(cfg, lp, h + a_out, dense=True)
+
+    def body(h, xs):
+        if cfg.attn_kind == "mla":
+            lp, theta, window, ckv, kr = xs
+            a_in = norm(cfg, h, lp["attn_norm"])
+            a_out, ckv, kr = mla_mod.mla_decode(cfg, lp["attn"], a_in, pos,
+                                                ckv, kr, absorbed=absorbed_mla)
+            kv_out = (ckv, kr)
+        else:
+            lp, theta, window, k, v = xs
+            a_in = norm(cfg, h, lp["attn_norm"])
+            a_out, k, v = attn.attn_decode(cfg, lp["attn"], a_in, pos, theta,
+                                           window, k, v)
+            kv_out = (k, v)
+        if cfg.post_norm:
+            a_out = norm(cfg, a_out, lp["post_attn_norm"])
+        h = _mlp_step(cfg, lp, h + a_out, dense=False)
+        return h, kv_out
+
+    if cfg.attn_kind == "mla":
+        xs = (params["layers"], thetas, windows, cache["ckv"], cache["kr"])
+        h, (ckv, kr) = scan_layers(body, h, xs)
+        new_cache["ckv"], new_cache["kr"] = ckv, kr
+    else:
+        xs = (params["layers"], thetas, windows, cache["k"], cache["v"])
+        h, (k, v) = scan_layers(body, h, xs)
+        new_cache["k"], new_cache["v"] = k, v
+
+    h = norm(cfg, h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    new_cache["pos"] = cache["pos"] + 1
+    return h @ head, new_cache
+
+
+def _decode_ssm(cfg, params, tokens, pos, cache):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    new_cache = dict(cache)
+
+    def body(h, xs):
+        lp, conv, state = xs
+        a_in = norm(cfg, h, lp["norm"])
+        out, conv, state = ssd_mod.ssd_decode(cfg, lp["ssd"], a_in, conv, state)
+        return h + out, (conv, state)
+
+    if cfg.attn_every:
+        n = cfg.n_layers
+        convs, states = [], []
+        app = 0
+        for seg_start in range(0, n, cfg.attn_every):
+            seg_end = min(seg_start + cfg.attn_every, n)
+            seg = jax.tree.map(lambda x: x[seg_start:seg_end], params["layers"])
+            xs = (seg, cache["conv"][seg_start:seg_end],
+                  cache["state"][seg_start:seg_end])
+            h, (conv, state) = scan_layers(body, h, xs)
+            convs.append(conv)
+            states.append(state)
+            if seg_end < n:
+                lp = params["shared_attn"]
+                a_in = norm(cfg, h, lp["attn_norm"])
+                a_out, k, v = attn.attn_decode(
+                    cfg, lp["attn"], a_in, pos, cfg.rope_theta, jnp.int32(-1),
+                    cache["attn_k"][app], cache["attn_v"][app])
+                new_cache["attn_k"] = new_cache["attn_k"].at[app].set(k)
+                new_cache["attn_v"] = new_cache["attn_v"].at[app].set(v)
+                h = h + a_out
+                m_in = norm(cfg, h, lp["mlp_norm"])
+                h = h + moe_mod.mlp_forward(cfg, lp["mlp"], m_in)
+                app += 1
+        new_cache["conv"] = jnp.concatenate(convs, axis=0)
+        new_cache["state"] = jnp.concatenate(states, axis=0)
+    else:
+        xs = (params["layers"], cache["conv"], cache["state"])
+        h, (conv, state) = scan_layers(body, h, xs)
+        new_cache["conv"], new_cache["state"] = conv, state
+
+    h = norm(cfg, h, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    new_cache["pos"] = cache["pos"] + 1
+    return h @ head, new_cache
+
+
+def _decode_encdec(cfg, params, tokens, pos, cache):
+    from .blocks import _cross_attn
+    h = jnp.take(params["embed"], tokens, axis=0)
+    from .common import sinusoidal_positions
+    pe = sinusoidal_positions(int(cache["k"].shape[2]), cfg.d_model)
+    h = h + pe[pos][:, None, :].astype(h.dtype)
+
+    def body(h, xs):
+        lp, k, v, ck, cv = xs
+        a_in = norm(cfg, h, lp["attn_norm"])
+        a_out, k, v = attn.attn_decode(cfg, lp["attn"], a_in, pos,
+                                       cfg.rope_theta, jnp.int32(-1), k, v)
+        h = h + a_out
+        c_in = norm(cfg, h, lp["cross_norm"])
+        h = h + _cross_attn(cfg, lp["cross"], c_in, ck, cv)
+        m_in = norm(cfg, h, lp["mlp_norm"])
+        h = h + moe_mod.mlp_forward(cfg, lp["mlp"], m_in)
+        return h, (k, v)
+
+    xs = (params["layers"], cache["k"], cache["v"],
+          cache["cross_k"], cache["cross_v"])
+    h, (k, v) = scan_layers(body, h, xs)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k, v
+    new_cache["pos"] = cache["pos"] + 1
+    h = norm(cfg, h, params["final_norm"])
+    return h @ params["embed"].T, new_cache

@@ -1,0 +1,148 @@
+"""MLPs: SwiGLU / GELU dense blocks and the DeepSeek-V2-style MoE
+(shared experts + top-k routed experts, capacity-bucket dispatch).
+
+Dispatch is the TPU-standard dense formulation: tokens are scattered into
+per-expert capacity buffers with one-hot position matrices, experts run as
+batched matmuls ([E, C, d] × [E, d, f] — MXU-shaped, EP-shardable on the
+expert axis), and outputs are combined with the router weights.  Dropped
+tokens (capacity overflow) lose their routed contribution but keep the
+shared-expert path, as in the reference systems.  The auxiliary
+load-balance loss is returned for the training objective.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, dtype_of, split_keys
+
+
+# ---------------------------------------------------------------- dense MLP
+def init_mlp(cfg, key, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = split_keys(key, 3)
+    if cfg.mlp_kind == "gelu":
+        return {"w_up": dense_init(ks[0], (d, f), dt),
+                "b_up": jnp.zeros((f,), dt),
+                "w_down": dense_init(ks[1], (f, d), dt),
+                "b_down": jnp.zeros((d,), dt)}
+    return {"w_gate": dense_init(ks[0], (d, f), dt),
+            "w_up": dense_init(ks[1], (d, f), dt),
+            "w_down": dense_init(ks[2], (f, d), dt)}
+
+
+def mlp_forward(cfg, p, x) -> jnp.ndarray:
+    if "w_gate" in p:
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]
+
+
+# --------------------------------------------------------------------- MoE
+def init_moe(cfg, key) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = dtype_of(cfg)
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), dt, scale=0.02),
+        "e_gate": dense_init(ks[1], (e, d, f), dt),
+        "e_up": dense_init(ks[2], (e, d, f), dt),
+        "e_down": dense_init(ks[3], (e, f, d), dt),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        ks2 = split_keys(ks[4], 3)
+        p["s_gate"] = dense_init(ks2[0], (d, fs), dt)
+        p["s_up"] = dense_init(ks2[1], (d, fs), dt)
+        p["s_down"] = dense_init(ks2[2], (fs, d), dt)
+    return p
+
+
+def moe_forward(cfg, p, x) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (out, aux_loss).
+
+    Sort-based dispatch: assignments are ranked within their expert via an
+    argsort (O(Nk log Nk), FLOP-free) and moved with scatter-add / gather —
+    the initial one-hot-einsum formulation cost O(N·E·C·D) MXU FLOPs and
+    dominated the whole roofline (recorded as the ``onehot_dispatch``
+    variant in EXPERIMENTS.md §Perf; the switch cut DS-236B train-step HLO
+    FLOPs ~4x).
+
+    REPRO_MOE_GROUPS=G (§Perf, expert parallelism): dispatch is done in G
+    batch-aligned groups (G = data-axis size), each with its own capacity
+    slice, so a token's scatter never crosses the data axis — GSPMD lowers
+    the exchange as expert-parallel all-to-all-style traffic instead of
+    all-reducing the full global buffer (the ``moe_groups`` variant).
+    """
+    import os
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    groups = int(os.environ.get("REPRO_MOE_GROUPS", "1"))
+    if groups > 1 and b % groups == 0:
+        xg = x.reshape(groups, b // groups, s, d)
+        out, aux = jax.vmap(
+            lambda xi: _moe_tokens(cfg, p, xi.reshape(-1, d)))(
+                xg.reshape(groups, -1, d))
+        return out.reshape(b, s, d), jnp.mean(aux)
+    out, aux = _moe_tokens(cfg, p, x.reshape(b * s, d))
+    return out.reshape(b, s, d), aux
+
+
+def _moe_tokens(cfg, p, xt) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch+compute+combine for a flat token block xt: [N, D]."""
+    e, k = cfg.n_experts, cfg.top_k
+    n, d = xt.shape
+
+    logits = (xt @ p["router"]).astype(jnp.float32)           # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # [N, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)               # renormalize
+
+    # Capacity floor of 8 keeps tiny decode batches drop-free (a 1-token
+    # step would otherwise drop assignments that prefill kept, breaking
+    # prefill->decode parity); large batches get the usual cf*N*k/E.
+    capacity = max(8, int(cfg.capacity_factor * n * k / e))
+
+    # --- rank each assignment within its expert (sort-based, no one-hot) --
+    flat_e = gate_idx.reshape(n * k)                          # [NK]
+    order = jnp.argsort(flat_e, stable=True)                  # assignments
+    sorted_e = flat_e[order]                                  # grouped by e
+    start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    rank_sorted = jnp.arange(n * k) - start[sorted_e]
+    rank = jnp.zeros((n * k,), jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))                        # [NK]
+    keep = rank < capacity
+    slot = jnp.where(keep, flat_e * capacity + rank, e * capacity)  # drop row
+
+    # --- scatter tokens into [E*C(+1 drop row), D] buffers ----------------
+    tok_idx = jnp.repeat(jnp.arange(n), k)
+    buffers = jnp.zeros((e * capacity + 1, d), xt.dtype)
+    buffers = buffers.at[slot].add(xt[tok_idx])
+    buffers = buffers[:e * capacity].reshape(e, capacity, d)
+
+    # --- batched expert MLPs  [E, C, d] x [E, d, f] ------------------------
+    hg = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buffers, p["e_gate"]))
+    hu = jnp.einsum("ecd,edf->ecf", buffers, p["e_up"])
+    he = jnp.einsum("ecf,efd->ecd", hg * hu, p["e_down"])
+
+    # --- gather back + combine with gate weights ---------------------------
+    he_flat = jnp.concatenate(
+        [he.reshape(e * capacity, d),
+         jnp.zeros((1, d), he.dtype)], axis=0)
+    per_slot = he_flat[slot].reshape(n, k, d)                 # [N, k, D]
+    out = jnp.sum(per_slot.astype(jnp.float32)
+                  * gate_vals[..., None], axis=1).astype(xt.dtype)
+
+    if cfg.n_shared_experts:
+        out = out + (jax.nn.silu(xt @ p["s_gate"]) * (xt @ p["s_up"])) @ p["s_down"]
+
+    # load-balance auxiliary loss (switch-style)
+    frac_tokens = (jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0)
+                   / (n * k)) * k
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs) / k
+    return out, aux.astype(jnp.float32)

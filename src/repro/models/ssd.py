@@ -1,0 +1,162 @@
+"""Mamba2 block (SSD): init, full-sequence forward, single-step decode.
+
+Block anatomy (Mamba2): in_proj -> [z | x | B | C | dt]; depthwise causal
+conv over (x, B, C); SSD scan s_t = exp(dt A) s_{t-1} + dt B x^T, y = C s;
+D-skip, SiLU(z) gating, RMSNorm, out_proj.
+
+Full-sequence forward calls the pure-jnp SSD reference (the Pallas
+``ssd_scan`` kernel is the TPU execution path, selectable with
+``use_pallas``); decode keeps a (conv window, state) cache — O(1) per step,
+which is what qualifies the SSM archs for the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, dtype_of, rms_norm, split_keys
+
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_ssd(cfg, key) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n_ = cfg.ssm_groups, cfg.ssm_state
+    nh = cfg.ssm_heads
+    dt = dtype_of(cfg)
+    ks = split_keys(key, 4)
+    in_dim = 2 * di + 2 * g * n_ + nh      # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], (d, in_dim), dt),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_dim(cfg)), dt,
+                             scale=cfg.conv_kernel ** -0.5),
+        "conv_b": jnp.zeros((conv_dim(cfg),), dt),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "ssm_norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[2], (di, d), dt),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di = cfg.d_inner
+    g, n_ = cfg.ssm_groups, cfg.ssm_state
+    nh = cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + conv_dim(cfg)]
+    dt = zxbcdt[..., di + conv_dim(cfg):di + conv_dim(cfg) + nh]
+    del g, n_
+    return z, xbc, dt
+
+
+def _causal_conv(cfg, p, xbc):
+    """Depthwise causal conv1d over [B, L, C]."""
+    k = cfg.conv_kernel
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * p["conv_w"][i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def ssd_forward(cfg, p, h, *, use_pallas: bool = False):
+    """Full-sequence forward.  h: [B, L, D] -> ([B, L, D], (conv_tail, state))."""
+    b, L, _ = h.shape
+    g, n_ = cfg.ssm_groups, cfg.ssm_state
+    nh, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = h @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(cfg, p, xbc_raw)
+    x = xbc[..., :cfg.d_inner].reshape(b, L, nh, pd)
+    bm = xbc[..., cfg.d_inner:cfg.d_inner + g * n_].reshape(b, L, g, n_)
+    cm = xbc[..., cfg.d_inner + g * n_:].reshape(b, L, g, n_)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    if use_pallas:
+        from repro.kernels.ssd_scan import ssd_scan
+        y = ssd_scan(x, dt.astype(x.dtype), a, bm, cm)
+    else:
+        from repro.kernels.ssd_scan.ref import ssd_scan_ref
+        rep = nh // g
+        bf = jnp.repeat(bm, rep, axis=2)
+        cf = jnp.repeat(cm, rep, axis=2)
+        xh = x.transpose(0, 2, 1, 3).reshape(b * nh, L, pd)
+        dth = dt.transpose(0, 2, 1).reshape(b * nh, L)
+        y = ssd_scan_ref(xh, dth, jnp.tile(a, b),
+                         bf.transpose(0, 2, 1, 3).reshape(b * nh, L, n_),
+                         cf.transpose(0, 2, 1, 3).reshape(b * nh, L, n_))
+        y = y.reshape(b, nh, L, pd).transpose(0, 2, 1, 3)
+    y = y + x * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, L, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    # cache tail: last (k-1) pre-conv features + final state (recomputed
+    # cheaply by the decode path; prefill fills it via ssd_state below)
+    conv_tail = xbc_raw[:, -(cfg.conv_kernel - 1):, :]
+    return out, conv_tail
+
+
+def ssd_final_state(cfg, p, h):
+    """Final SSM state after a full sequence (for prefill->decode handoff).
+    Returns [B, H, N, P] fp32."""
+    b, L, _ = h.shape
+    g, n_ = cfg.ssm_groups, cfg.ssm_state
+    nh, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = h @ p["in_proj"]
+    _z, xbc_raw, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(cfg, p, xbc_raw)
+    x = xbc[..., :cfg.d_inner].reshape(b, L, nh, pd)
+    bm = xbc[..., cfg.d_inner:cfg.d_inner + g * n_].reshape(b, L, g, n_)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    rep = nh // g
+    bf = jnp.repeat(bm, rep, axis=2)                   # [B, L, H, N]
+
+    def step(s, inp):
+        xt, dtt, bt = inp                              # [B,H,P],[B,H],[B,H,N]
+        lam = jnp.exp(dtt * a[None, :])[..., None, None]
+        s = lam * s + dtt[..., None, None] * (
+            bt[..., :, None] * xt[..., None, :].astype(jnp.float32))
+        return s, None
+
+    s0 = jnp.zeros((b, nh, n_, pd), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          bf.transpose(1, 0, 2, 3))
+    s, _ = jax.lax.scan(step, s0, xs)
+    return s
+
+
+def ssd_decode(cfg, p, h, conv_cache, state):
+    """Single step.  h: [B, 1, D]; conv_cache: [B, k-1, conv_dim] (pre-conv
+    features); state: [B, H, N, P] fp32.  Returns (out, conv_cache, state)."""
+    b = h.shape[0]
+    g, n_ = cfg.ssm_groups, cfg.ssm_state
+    nh, pd = cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = h @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split_proj(cfg, zxbcdt)       # [B,1,*]
+    window = jnp.concatenate([conv_cache, xbc_raw], axis=1)  # [B, k, C]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)                          # [B, C]
+    x = xbc[..., :cfg.d_inner].reshape(b, nh, pd)
+    bm = xbc[..., cfg.d_inner:cfg.d_inner + g * n_].reshape(b, g, n_)
+    cm = xbc[..., cfg.d_inner + g * n_:].reshape(b, g, n_)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    rep = nh // g
+    bf = jnp.repeat(bm, rep, axis=1)                     # [B, H, N]
+    cf = jnp.repeat(cm, rep, axis=1)
+    lam = jnp.exp(dt * a[None, :])[..., None, None]      # [B, H, 1, 1]
+    state = lam * state + dt[..., None, None] * (
+        bf[..., :, None] * x[..., None, :].astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", cf.astype(jnp.float32), state)
+    y = y.astype(h.dtype) + x * p["d_skip"][None, :, None].astype(h.dtype)
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    conv_cache = window[:, 1:, :]
+    return out, conv_cache, state

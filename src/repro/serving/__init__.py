@@ -1,0 +1,4 @@
+from .kv_cache import PagePool, Sequence
+from .prefix_cache import PrefixCache
+
+__all__ = ["PagePool", "PrefixCache", "Sequence"]

@@ -1,0 +1,76 @@
+"""Paged KV-cache pool for serving.
+
+Pages are fixed-size token blocks ([PS, Hkv, Dh] per layer); sequences own
+page lists via the page table.  The pool integrates with
+``kernels/paged_attention`` (scalar-prefetch gather on TPU) and with the
+LSM-backed prefix cache (prefix_cache.py) which pins shared pages.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PagePool:
+    n_pages: int
+    page_size: int
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    dtype: str = "float32"
+    k_pages: jnp.ndarray = field(init=False)   # [L, NP, PS, Hkv, Dh]
+    v_pages: jnp.ndarray = field(init=False)
+
+    def __post_init__(self):
+        shape = (self.n_layers, self.n_pages, self.page_size,
+                 self.n_kv_heads, self.head_dim)
+        self.k_pages = jnp.zeros(shape, jnp.dtype(self.dtype))
+        self.v_pages = jnp.zeros(shape, jnp.dtype(self.dtype))
+        self._free = list(range(self.n_pages - 1, -1, -1))
+        self.refcount = np.zeros(self.n_pages, np.int32)
+
+    # ------------------------------------------------------------- alloc
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise MemoryError("page pool exhausted")
+        p = self._free.pop()
+        self.refcount[p] = 1
+        return p
+
+    def pin(self, page: int) -> None:
+        self.refcount[page] += 1
+
+    def release(self, page: int) -> None:
+        self.refcount[page] -= 1
+        if self.refcount[page] <= 0:
+            self.refcount[page] = 0
+            self._free.append(page)
+
+    # ------------------------------------------------------------- write
+    def write_tokens(self, layer: int, page: int, offset: int,
+                     k: jnp.ndarray, v: jnp.ndarray) -> None:
+        """k, v: [T, Hkv, Dh] with offset+T <= page_size."""
+        self.k_pages = self.k_pages.at[layer, page, offset:offset + k.shape[0]].set(k)
+        self.v_pages = self.v_pages.at[layer, page, offset:offset + v.shape[0]].set(v)
+
+
+@dataclass
+class Sequence:
+    seq_id: int
+    tokens: list[int] = field(default_factory=list)
+    pages: list[int] = field(default_factory=list)
+    length: int = 0
+    shared_prefix_len: int = 0
+
+    def pages_needed(self, page_size: int, new_tokens: int) -> int:
+        have = len(self.pages) * page_size
+        need = self.length + new_tokens
+        return max(0, -(-(need - have) // page_size))

@@ -1,0 +1,5 @@
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+from .step import make_prefill, make_serve_step, make_train_step
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "make_prefill",
+           "make_serve_step", "make_train_step"]

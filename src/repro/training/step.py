@@ -1,0 +1,76 @@
+"""train_step / serve_step factories — the functions the launcher jits.
+
+``make_train_step`` returns ``step(params, opt_state, batch) -> (params,
+opt_state, metrics)`` with value_and_grad over the scanned-remat forward,
+AdamW, gradient clipping, and optional int8 gradient compression (error
+feedback folded into opt_state — see distributed/compression.py).
+
+``make_serve_step`` returns the single-token decode used by decode_32k /
+long_500k; ``make_prefill`` the full-sequence prefill.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, forward, train_loss
+from .optimizer import AdamWConfig, adamw_update, init_opt_state  # noqa: F401
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig | None = None, *,
+                    use_pallas: bool = False, remat: bool = True,
+                    grad_accum: int = 1, compress_grads: bool = False):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def loss_fn(params, batch):
+        return train_loss(cfg, params, batch, use_pallas=use_pallas,
+                          remat=remat)
+
+    def step(params, opt_state, batch):
+        if grad_accum > 1:
+            def micro(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+                return (loss_acc + loss, grads_acc), None
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum,
+                                    *x.shape[1:]), batch)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zeros), mbs)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if compress_grads:
+            from repro.distributed.compression import compress_tree
+            grads, opt_state = compress_tree(grads, opt_state)
+        params, opt_state, gnorm = adamw_update(opt_cfg, params, grads,
+                                                opt_state)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_serve_step(cfg, *, absorbed_mla: bool = True):
+    def serve_step(params, tokens, pos, cache):
+        logits, cache = decode_step(cfg, params, tokens, pos, cache,
+                                    absorbed_mla=absorbed_mla)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+    return serve_step
+
+
+def make_prefill(cfg, *, cache_len: int | None = None,
+                 use_pallas: bool = False):
+    def prefill(params, batch) -> Any:
+        return forward(cfg, params, batch, mode="prefill",
+                       cache_len=cache_len, use_pallas=use_pallas,
+                       remat=False)
+    return prefill

@@ -1,0 +1,86 @@
+"""LSM checkpoint store: incremental saves, restore parity, versioned
+restore, GC, reshard-on-restore."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import LSMCheckpointStore
+
+
+def _tree(seed, shape=(100, 50)):
+    rng = np.random.default_rng(seed)
+    return {"layers": {"w": rng.standard_normal(shape).astype(np.float32)},
+            "bias": rng.standard_normal(shape[1]).astype(np.float32),
+            "step": np.asarray(seed)}
+
+
+def test_roundtrip_and_incremental(tmp_path):
+    store = LSMCheckpointStore(tmp_path, page_bytes=4096)
+    t0 = _tree(0)
+    s0 = store.save(0, t0)
+    assert s0["pages_written"] == s0["pages_total"] > 0
+    # identical tree -> zero pages written (page hashing)
+    s1 = store.save(1, t0)
+    assert s1["pages_written"] == 0
+    # mutate one page worth of one leaf
+    t2 = {**t0, "bias": t0["bias"] + 1}
+    s2 = store.save(2, t2)
+    assert 0 < s2["pages_written"] < s0["pages_total"]
+
+    got, stats = store.restore(2, treedef_like=t2)
+    for k in ("bias",):
+        np.testing.assert_array_equal(got[k], t2[k])
+    np.testing.assert_array_equal(got["layers"]["w"], t0["layers"]["w"])
+    assert stats["segments_touched"] <= stats["segments_total"]
+
+
+def test_restore_older_step(tmp_path):
+    store = LSMCheckpointStore(tmp_path, page_bytes=2048)
+    trees = [_tree(i) for i in range(3)]
+    for i, t in enumerate(trees):
+        store.save(i, t)
+    for i in range(3):
+        got, _ = store.restore(i, treedef_like=trees[i])
+        np.testing.assert_array_equal(got["layers"]["w"],
+                                      trees[i]["layers"]["w"])
+
+
+def test_manifest_reload(tmp_path):
+    store = LSMCheckpointStore(tmp_path, page_bytes=2048)
+    t = _tree(5)
+    store.save(0, t)
+    # a new store over the same dir must restore identically (recovery)
+    store2 = LSMCheckpointStore(tmp_path, page_bytes=2048)
+    got, _ = store2.restore(0, treedef_like=t)
+    np.testing.assert_array_equal(got["layers"]["w"], t["layers"]["w"])
+
+
+def test_reshard_on_restore(tmp_path):
+    """Elastic restore: device_put under a (new) sharding."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    store = LSMCheckpointStore(tmp_path, page_bytes=2048)
+    t = _tree(7)
+    store.save(0, t)
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = jax.tree.map(
+        lambda x: NamedSharding(mesh, P(*([None] * np.ndim(x)))), t)
+    got, _ = store.restore(0, treedef_like=t, shardings=shardings)
+    np.testing.assert_array_equal(np.asarray(got["bias"]), t["bias"])
+
+
+def test_index_uses_vlsm_policy(tmp_path):
+    from repro.core import Policy
+    store = LSMCheckpointStore(tmp_path, page_bytes=1024)
+    assert store.index.cfg.policy == Policy.VLSM
+    # churn enough versions to force index compactions, then verify the
+    # tree invariants still hold (real LSM underneath)
+    rng = np.random.default_rng(0)
+    for i in range(12):
+        store.save(i, {"w": rng.standard_normal((64, 64)).astype(np.float32)})
+    store.index.check_invariants()
+    got, stats = store.restore(11, treedef_like={"w": np.zeros((64, 64),
+                                                               np.float32)})
+    assert got["w"].shape == (64, 64)
+    # bounded restore read-amp: newest step touches few segments
+    assert stats["segments_touched"] <= 3

@@ -1,0 +1,129 @@
+"""Per-kernel allclose vs pure-jnp oracles, shape/dtype sweeps
+(interpret=True — kernel bodies execute on CPU; TPU is the target)."""
+
+import numpy as np
+import pytest
+
+jnp = pytest.importorskip("jax.numpy")
+import jax  # noqa: E402
+
+
+# ------------------------------------------------------------- merge_path
+@pytest.mark.parametrize("n,m", [(1, 1), (7, 130), (128, 128), (257, 511),
+                                 (1000, 2500)])
+def test_merge_path(n, m):
+    from repro.kernels.merge_path import ops
+    rng = np.random.default_rng(n * 1000 + m)
+    a = np.sort(rng.integers(-2**46, 2**46, n).astype(np.int64))
+    b = np.sort(rng.integers(-2**46, 2**46, m).astype(np.int64))
+    if n > 2 and m > 2:
+        b[:2] = a[:2]
+        b = np.sort(b)
+    asq = np.arange(n, dtype=np.int64)
+    bsq = np.arange(n, n + m, dtype=np.int64)
+    k, s = ops.merge_two_runs_np(a, asq, b, bsq)
+    kk = np.concatenate([a, b]); ss = np.concatenate([asq, bsq])
+    order = np.argsort(kk, kind="stable")
+    assert np.array_equal(k, kk[order])
+    assert np.array_equal(s, ss[order])
+
+
+def test_merge_path_planes_roundtrip():
+    from repro.kernels.merge_path.ops import join_planes, split_planes
+    rng = np.random.default_rng(0)
+    keys = rng.integers(-2**62, 2**62, 1000).astype(np.int64)
+    hi, lo = split_planes(keys)
+    assert np.array_equal(join_planes(hi, lo), keys)
+    # order preservation under (hi, lo) lexicographic compare
+    order = np.lexsort((lo.astype(np.int64), hi.astype(np.int64)))
+    assert np.array_equal(keys[order], np.sort(keys))
+
+
+# ------------------------------------------------------------ overlap_scan
+@pytest.mark.parametrize("nf,nk", [(1, 5), (130, 7), (640, 1000)])
+def test_overlap_scan(nf, nk):
+    from repro.kernels.overlap_scan import ops
+    rng = np.random.default_rng(nf + nk)
+    f = np.sort(rng.integers(-2**45, 2**45, nf).astype(np.int64))
+    k = rng.integers(-2**45, 2**45, nk).astype(np.int64)
+    k[: min(nf, nk) // 2] = f[: min(nf, nk) // 2]
+    got = ops.fence_rank_np(f, k)
+    assert np.array_equal(got, np.searchsorted(f, k, side="right"))
+
+
+# --------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("b,hq,hkv,s,d,win,dtype", [
+    (1, 2, 2, 256, 64, None, "float32"),
+    (2, 4, 2, 128, 64, None, "float32"),
+    (1, 2, 1, 256, 128, 128, "float32"),
+    (1, 2, 2, 384, 64, None, "bfloat16"),
+    (1, 1, 1, 130, 64, None, "float32"),
+])
+def test_flash_attention(b, hq, hkv, s, d, win, dtype):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    rng = np.random.default_rng(42)
+    dt = jnp.dtype(dtype)
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d)), dt)
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dt)
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)), dt)
+    got = flash_attention(q, k, v, causal=True, window=win)
+    ref = attention_ref(q, k, v, causal=True, window=win)
+    tol = 3e-2 if dtype == "bfloat16" else 2e-5
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - ref.astype(jnp.float32)))) < tol
+
+
+# --------------------------------------------------------- paged_attention
+@pytest.mark.parametrize("b,hq,hkv,d,npg,ps,maxp,dtype", [
+    (2, 4, 2, 64, 16, 16, 4, "float32"),
+    (1, 8, 1, 128, 32, 32, 8, "float32"),
+    (3, 4, 4, 64, 8, 16, 3, "bfloat16"),
+])
+def test_paged_attention(b, hq, hkv, d, npg, ps, maxp, dtype):
+    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    rng = np.random.default_rng(7)
+    dt = jnp.dtype(dtype)
+    q = jnp.asarray(rng.standard_normal((b, hq, d)), dt)
+    kp = jnp.asarray(rng.standard_normal((npg, ps, hkv, d)), dt)
+    vp = jnp.asarray(rng.standard_normal((npg, ps, hkv, d)), dt)
+    pt = jnp.asarray(rng.integers(0, npg, (b, maxp)), jnp.int32)
+    ln = jnp.asarray(rng.integers(1, maxp * ps + 1, (b,)), jnp.int32)
+    got = paged_attention(q, kp, vp, pt, ln)
+    ref = paged_attention_ref(q, kp, vp, pt, ln)
+    tol = 5e-2 if dtype == "bfloat16" else 2e-5
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - ref.astype(jnp.float32)))) < tol
+
+
+# ---------------------------------------------------------------- ssd_scan
+@pytest.mark.parametrize("b,L,h,g,p,n,ck,dtype", [
+    (1, 128, 2, 1, 64, 64, 64, "float32"),
+    (2, 256, 4, 2, 32, 16, 128, "float32"),
+    (1, 200, 2, 1, 64, 32, 64, "float32"),
+    (1, 128, 2, 1, 64, 64, 64, "bfloat16"),
+])
+def test_ssd_scan(b, L, h, g, p, n, ck, dtype):
+    from repro.kernels.ssd_scan import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    rng = np.random.default_rng(4)
+    dt = jnp.dtype(dtype)
+    x = jnp.asarray(rng.standard_normal((b, L, h, p)), dt)
+    dts = jnp.asarray(np.abs(rng.standard_normal((b, L, h))) * 0.1 + 0.01, dt)
+    a = jnp.asarray(-np.abs(rng.standard_normal(h)) - 0.1, jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, L, g, n)) * 0.3, dt)
+    cc = jnp.asarray(rng.standard_normal((b, L, g, n)) * 0.3, dt)
+    got = ssd_scan(x, dts, a, bb, cc, ck=ck)
+    rep = h // g
+    bf = jnp.repeat(bb, rep, axis=2); cf = jnp.repeat(cc, rep, axis=2)
+    ref = ssd_scan_ref(
+        x.transpose(0, 2, 1, 3).reshape(b * h, L, p),
+        dts.transpose(0, 2, 1).reshape(b * h, L),
+        jnp.tile(a, b),
+        bf.transpose(0, 2, 1, 3).reshape(b * h, L, n),
+        cf.transpose(0, 2, 1, 3).reshape(b * h, L, n),
+    ).reshape(b, h, L, p).transpose(0, 2, 1, 3)
+    tol = 6e-2 if dtype == "bfloat16" else 2e-4
+    assert float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - ref.astype(jnp.float32)))) < tol

@@ -1,0 +1,101 @@
+"""Prefix cache, page pool, data pipeline determinism/resume, FT hooks."""
+
+import numpy as np
+import pytest
+
+from repro.data import BatchAllocator, PipelineState, TokenPipeline
+from repro.ft import FailureInjector, InjectedFailure, StepWatchdog
+from repro.serving import PagePool, PrefixCache
+
+
+def _pool(n=64):
+    return PagePool(n_pages=n, page_size=16, n_layers=2, n_kv_heads=2,
+                    head_dim=8)
+
+
+def test_page_pool_refcounting():
+    pool = _pool(4)
+    pages = [pool.alloc() for _ in range(4)]
+    with pytest.raises(MemoryError):
+        pool.alloc()
+    pool.pin(pages[0])
+    pool.release(pages[0])
+    assert pool.free_pages == 0      # still pinned once
+    pool.release(pages[0])
+    assert pool.free_pages == 1
+
+
+def test_prefix_cache_match_and_evict():
+    pool = _pool()
+    pc = PrefixCache(pool, block_tokens=8)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 1000, 32).astype(np.int32)
+    pages = [[pool.alloc()] for _ in range(4)]
+    assert pc.insert(toks, pages) == 4
+    n, got_pages = pc.match(toks)
+    assert n == 32 and len(got_pages) == 4
+    # longest-prefix semantics: a diverging tail still matches the head
+    toks2 = toks.copy(); toks2[20:] = 999
+    n2, _ = pc.match(toks2)
+    assert n2 == 16
+    # unknown prompt: no match
+    n3, _ = pc.match(rng.integers(1000, 2000, 32).astype(np.int32))
+    assert n3 == 0
+    free_before = pool.free_pages
+    assert pc.evict_lru(2) == 2
+    assert pool.free_pages >= free_before
+
+
+def test_prefix_cache_under_churn_keeps_lsm_invariants():
+    pool = PagePool(n_pages=4096, page_size=16, n_layers=1, n_kv_heads=1,
+                    head_dim=4)
+    pc = PrefixCache(pool, block_tokens=4)
+    rng = np.random.default_rng(1)
+    for i in range(300):
+        toks = rng.integers(0, 10**6, 8).astype(np.int32)
+        pc.insert(toks, [[pool.alloc()], [pool.alloc()]])
+    pc.index.check_invariants()
+    st = pc.index.stats
+    assert st.user_bytes > 0
+
+
+def test_pipeline_determinism_and_resume():
+    st = PipelineState(seed=3, rank=0, world=2)
+    p1 = TokenPipeline(1000, 16, 4, st)
+    b1 = [p1.next_batch() for _ in range(5)]
+    # resume from cursor 3 reproduces batches 3,4 exactly
+    st2 = PipelineState(seed=3, rank=0, world=2, cursor=3)
+    p2 = TokenPipeline(1000, 16, 4, st2)
+    for i in range(3, 5):
+        b = p2.next_batch()
+        np.testing.assert_array_equal(b["tokens"], b1[i]["tokens"])
+    # different rank -> different stream
+    p3 = TokenPipeline(1000, 16, 4, PipelineState(seed=3, rank=1, world=2))
+    assert not np.array_equal(p3.next_batch()["tokens"], b1[0]["tokens"])
+    # labels are next-token shifted
+    assert np.array_equal(b1[0]["labels"][:, :-1], b1[0]["tokens"][:, 1:])
+
+
+def test_batch_allocator_work_stealing():
+    alloc = BatchAllocator()
+    a = [alloc.claim(0) for _ in range(3)]
+    b = [alloc.claim(1) for _ in range(2)]
+    assert sorted(a + b) == list(range(5))   # no batch lost or duplicated
+
+
+def test_watchdog_flags_stragglers():
+    import time
+    wd = StepWatchdog(threshold=3.0, alpha=0.5)
+    for _ in range(3):
+        wd.start(); time.sleep(0.002); wd.stop(0)
+    wd.start(); time.sleep(0.05)
+    assert wd.stop(3) is True
+    assert wd.stragglers
+
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector(fail_at_step=2)
+    inj.check(0); inj.check(1)
+    with pytest.raises(InjectedFailure):
+        inj.check(2)
+    inj.check(2)  # idempotent after firing
