@@ -71,5 +71,9 @@ def load_at_fraction(cfg: LSMConfig, frac: float = 0.6, n: int = 50_000):
     return run_ycsb(cfg, make_load_a(n), rate=frac * sus(cfg, n), scale=SCALE)
 
 
+ROWS: list[dict] = []
+
+
 def emit(name: str, value, derived: str = "") -> None:
+    ROWS.append({"name": name, "value": value, "derived": derived})
     print(f"{name},{value},{derived}", flush=True)

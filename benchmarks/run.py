@@ -18,6 +18,8 @@ def main() -> None:
                     help="comma-separated figure ids (default: all)")
     ap.add_argument("--full", action="store_true",
                     help="larger op counts (slower, smoother tails)")
+    ap.add_argument("--json", default=None,
+                    help="also persist every emitted row as JSON here")
     args = ap.parse_args()
 
     from . import fig_benchmarks as fb
@@ -61,6 +63,13 @@ def main() -> None:
     except Exception as e:  # pragma: no cover
         print(f"# compression_wire skipped: {e}")
     print(f"# total {time.time()-t0:.1f}s")
+    if args.json:
+        import json
+        from pathlib import Path
+
+        from .common import ROWS
+        Path(args.json).write_text(json.dumps(ROWS, indent=1))
+        print(f"# wrote {args.json} ({len(ROWS)} rows)")
 
 
 if __name__ == "__main__":

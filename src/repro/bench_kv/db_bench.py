@@ -3,18 +3,29 @@
 ``fillrandom`` populates the store to a target level-fill (the paper fills
 all levels but the last) under uniform or Pareto key popularity and
 reports I/O amplification — the paper measures only amplification with
-db_bench, as do we.
+db_bench, as do we.  ``read_path`` is the read-side companion: a
+read-heavy YCSB-C run that times the DES wall-clock end-to-end, tracking
+the batched LevelIndex GET path.
 
-    PYTHONPATH=src python -m repro.bench_kv.db_bench
+Results are persisted as machine-readable JSON rows (policy, io_amp,
+p99s, sim wall-clock) so the perf trajectory is diffable across commits:
+
+    PYTHONPATH=src python -m repro.bench_kv.db_bench --json BENCH_dbbench.json
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import time
+from pathlib import Path
+
 import numpy as np
 
 from repro.core import DeviceModel, LSMConfig, Simulator
+from repro.core import level_index
 
-from .workloads import load_keys, pareto_keys
+from .workloads import load_keys, make_run_c, pareto_keys
 
 
 def fillrandom(cfg: LSMConfig, n_ops: int, *, dist: str = "uniform",
@@ -25,26 +36,79 @@ def fillrandom(cfg: LSMConfig, n_ops: int, *, dist: str = "uniform",
     base = load_keys(n_ops, seed)
     keys = base if dist == "uniform" else pareto_keys(base, n_ops, seed=seed)
     arrivals = np.arange(n_ops) / 1e6          # flood: amp-only measurement
+    t0 = time.perf_counter()
     res = sim.run(np.zeros(n_ops, np.uint8), keys, arrivals)
+    wall = time.perf_counter() - t0
     st = res.stats
     return {
-        "dist": dist, "policy": cfg.policy.value, "ops": n_ops,
+        "bench": "fillrandom", "dist": dist, "policy": cfg.policy.value,
+        "ops": n_ops,
         "io_amp": round(st.io_amp, 2), "write_amp": round(st.write_amp, 2),
         "levels_filled": sum(1 for s in sim.trees[0].level_sizes() if s > 0),
         "compactions": sum(st.compactions_per_level.values()),
+        "wall_clock_s": round(wall, 3),
     }
 
 
-def main():
+def read_path(cfg: LSMConfig, n_ops: int = 200_000, n_pop: int = 100_000, *,
+              scale: int | None = None, rate: float = 1e4,
+              seed: int = 7) -> dict:
+    """Read-heavy YCSB-C probe (zipfian GETs over a preloaded store): the
+    wall-clock of the whole DES run is the tracked quantity — it is
+    dominated by the GET path, one ``LSMTree.get_batch`` per window."""
+    scale = scale or cfg.memtable_size
+    lam = scale / (64 << 20)
+    pop = np.unique(load_keys(n_pop, seed))
+    spec = make_run_c(pop, n_ops, dist="zipfian")
+    op_types = np.concatenate([np.zeros(pop.shape[0], np.uint8),
+                               spec.op_types])
+    keys = np.concatenate([pop, spec.keys])
+    arrivals = np.arange(op_types.shape[0], dtype=np.float64) / rate
+    sim = Simulator(cfg, DeviceModel.scaled(lam))
+    t0 = time.perf_counter()
+    res = sim.run(op_types, keys, arrivals)
+    wall = time.perf_counter() - t0
+    g = res.op_types == 1
+    return {
+        "bench": "read_path", "workload": "run_c",
+        "policy": cfg.policy.value, "ops": n_ops,
+        "wall_clock_s": round(wall, 3),
+        "p99_get_ms": round(res.pct(99, op=1) * 1e3, 3),
+        "device_reads": int(sim.stats.device_reads),
+        "mean_ssts_probed": round(float(res.get_probed[g].mean()), 3),
+        "index_backend": cfg.index_backend or level_index.get_backend(),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_dbbench.json",
+                    help="write JSON rows here ('' disables)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (~10x fewer ops)")
+    args = ap.parse_args(argv)
     scale = 1 << 18
-    n = 120_000   # fills all levels but the last at this scale
+    n_fill = 12_000 if args.quick else 120_000
+    n_read = 20_000 if args.quick else 200_000
+    n_pop = 10_000 if args.quick else 100_000
+
+    rows = []
     for dist in ("uniform", "pareto"):
         for name, cfg in (
                 ("vlsm", LSMConfig.vlsm_default(scale=scale)),
                 ("rocksdb", LSMConfig.rocksdb_default(scale=scale)),
                 ("adoc", LSMConfig.adoc_default(scale=scale))):
-            row = fillrandom(cfg, n, dist=dist, scale=scale)
+            row = fillrandom(cfg, n_fill, dist=dist, scale=scale)
+            rows.append(row)
             print(f"db_bench.{dist}.{name}: {row}")
+    for name, cfg in (("vlsm", LSMConfig.vlsm_default(scale=scale)),
+                      ("rocksdb_io", LSMConfig.rocksdb_io_default(scale=scale))):
+        row = read_path(cfg, n_read, n_pop, scale=scale)
+        rows.append(row)
+        print(f"db_bench.read_path.{name}: {row}")
+    if args.json:
+        Path(args.json).write_text(json.dumps(rows, indent=1))
+        print(f"wrote {args.json} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -80,6 +80,7 @@ def run_ycsb(cfg: LSMConfig, spec: WorkloadSpec, rate: float,
             op_types=res.op_types[n_pre:], stall_total=res.stall_total,
             stall_max=res.stall_max, n_stalls=res.n_stalls, stats=res.stats,
             job_log=res.job_log, makespan=res.makespan,
+            get_reads=res.get_reads[n_pre:], get_probed=res.get_probed[n_pre:],
         )
     out = YCSBResult(spec.name, res, rate, lam)
     out.extra["levels_mb"] = [round(s / 1e6, 2) for s in sim.trees[0].level_sizes()]

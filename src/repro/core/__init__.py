@@ -5,6 +5,7 @@ Public API::
     from repro.core import LSMConfig, Policy, DeviceModel, LSMTree, Simulator
 """
 
+from .level_index import LevelIndex
 from .lsm import Job, LSMTree
 from .memtable import Memtable
 from .sim import SimResult, Simulator
@@ -13,6 +14,7 @@ from .stats import ChainRecord, Stats
 from .types import DeviceModel, LSMConfig, Policy
 
 __all__ = [
-    "ChainRecord", "DeviceModel", "Job", "LSMConfig", "LSMTree", "Memtable",
-    "Policy", "SST", "SimResult", "Simulator", "Stats",
+    "ChainRecord", "DeviceModel", "Job", "LSMConfig", "LSMTree",
+    "LevelIndex", "Memtable", "Policy", "SST", "SimResult", "Simulator",
+    "Stats",
 ]

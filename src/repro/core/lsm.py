@@ -30,11 +30,13 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import merge as merge_backend
+from .level_index import (LevelIndex, bloom_false_positives,
+                          bloom_seed_for_uid)
 from .memtable import Memtable
-from .sst import SST, overlapping, split_fixed, total_size
+from .sst import SST, split_fixed, total_size
 from .stats import ChainRecord, Stats
 from .types import LSMConfig, Policy
-from .vsst import l2_fences, overlap_count_range, plan_vssts, select_good_vssts
+from .vsst import plan_vssts, select_good_vssts
 
 _job_ids = itertools.count()
 
@@ -73,6 +75,10 @@ class LSMTree:
         # levels[0] is L0: FIFO, newest LAST; overlapping allowed.
         # levels[i>=1]: sorted by key, pairwise disjoint.
         self.levels: list[list[SST]] = [[] for _ in range(cfg.max_levels)]
+        # The manifest: flat fence/bloom arrays mirroring ``levels``,
+        # maintained incrementally by every structural mutation below and
+        # serving ALL overlap queries (GETs, compaction picking, vSST fences).
+        self.index = LevelIndex(cfg.max_levels, backend=cfg.index_backend)
         self.seq = 0
         self.pending_jobs: list[Job] = []
 
@@ -115,6 +121,7 @@ class LSMTree:
             self.pending_jobs.append(job)
             return job, chain_jobs
         self.levels[0].append(sst)
+        self.index.l0_append(sst)
         self.stats.flush_bytes += sst.size
         self.stats.ssts_created += 1
         self.stats.manifest_flushes += 1
@@ -184,9 +191,9 @@ class LSMTree:
         l0 = self.levels[0]
         if not l0:
             return None
-        lo = min(s.smallest for s in l0)
-        hi = max(s.largest for s in l0)
-        l1_over = overlapping(self.levels[1], lo, hi)
+        lo = int(self.index.smallest[0].min())
+        hi = int(self.index.largest[0].max())
+        l1_over = self._overlap(1, lo, hi)
         runs = [(s.keys, s.seqs) for s in reversed(l0)]  # newest first
         runs += [(s.keys, s.seqs) for s in l1_over]
         keys, seqs = merge_backend.merge_runs(runs)
@@ -197,6 +204,7 @@ class LSMTree:
         write_b = sum(s.size for s in new)
         n_l0 = len(l0)
         self.levels[0] = []
+        self.index.l0_clear()
         job = self._emit_compact_job(0, read_b, write_b,
                                      n_l0 + len(l1_over), len(new), deps)
         job.l0_consumed = n_l0
@@ -208,7 +216,8 @@ class LSMTree:
         if not l0:
             return None
         src = l0.pop(0)  # FIFO: oldest first (vLSM §4.1)
-        l1_over = overlapping(self.levels[1], src.smallest, src.largest)
+        self.index.l0_popleft()
+        l1_over = self._overlap(1, src.smallest, src.largest)
         runs = [(src.keys, src.seqs)] + [(s.keys, s.seqs) for s in l1_over]
         keys, seqs = merge_backend.merge_runs(runs)
         self.stats.merged_keys += int(keys.shape[0])
@@ -227,7 +236,7 @@ class LSMTree:
     def _build_vssts(self, keys: np.ndarray, seqs: np.ndarray) -> list[SST]:
         """Cut the merged L1 stream into overlap-aware vSSTs (§4.2)."""
         cfg = self.cfg
-        fence_lo, fence_hi = l2_fences(self.levels[2])
+        fence_lo, fence_hi = self.index.fences(2)
         plans = plan_vssts(keys, cfg.kv_size, cfg.s_m, cfg.s_M,
                            cfg.growth_factor, fence_lo, fence_hi, cfg.sst_size)
         self.stats.overlap_probes += int(keys.shape[0])  # per-key look-ahead
@@ -251,17 +260,17 @@ class LSMTree:
         l1 = self.levels[1]
         if not l1:
             return None
-        fence_lo, fence_hi = l2_fences(self.levels[2])
+        fence_lo, fence_hi = self.index.fences(2)
+        # One batched overlap query scores every L1 vSST against L2.
+        ov = self.index.overlap_counts(2, *self.index.fences(1))
         picked = select_good_vssts(l1, fence_lo, fence_hi, cfg.sst_size,
-                                   cfg.growth_factor, cfg.sst_size)
+                                   cfg.growth_factor, cfg.sst_size, ov=ov)
         self.stats.overlap_probes += len(l1)
         if not picked:
             # Φ too large: no good vSSTs exist (paper's Fig 13 failure mode).
             # Fall back to the least-bad vSST so the store still progresses.
-            ratios = [(overlap_count_range(fence_lo, fence_hi, s.smallest,
-                                           s.largest) * cfg.sst_size
-                       / max(1, s.size), i) for i, s in enumerate(l1)]
-            picked = [min(ratios)[1]]
+            ratios = ov * cfg.sst_size / np.maximum(1, self.index.sizes[1])
+            picked = [int(np.argmin(ratios))]
         return self._merge_down_multi(1, picked, deps)
 
     def _leveled_pick(self, level: int, deps: list[Job]) -> Job | None:
@@ -270,15 +279,12 @@ class LSMTree:
         src_level = self.levels[level]
         if not src_level:
             return None
-        nxt = self.levels[level + 1]
-        scores = []
-        for i, s in enumerate(src_level):
-            over = overlapping(nxt, s.smallest, s.largest)
-            ob = total_size(over)
-            scores.append((ob / max(1, s.size), i))
-        scores.sort()
+        # One batched fence query scores the whole level (was a per-SST scan).
+        scores = (self.index.overlap_bytes(level, level + 1)
+                  / np.maximum(1, self.index.sizes[level]))
         n_pick = cfg.adoc_batch if cfg.policy == Policy.ADOC else 1
-        picked = [i for _r, i in scores[:n_pick]]
+        order = np.lexsort((np.arange(scores.shape[0]), scores))
+        picked = [int(i) for i in order[:n_pick]]
         return self._merge_down_multi(level, picked, deps)
 
     def _merge_down_multi(self, level: int, picked_idx: list[int],
@@ -309,18 +315,19 @@ class LSMTree:
 
         read_b = write_b = n_in = n_out = 0
         for group in groups:
-            nxt = self.levels[level + 1]
             lo = min(s.smallest for s in group)
             hi = max(s.largest for s in group)
-            over = overlapping(nxt, lo, hi)
+            over = self._overlap(level + 1, lo, hi)
             runs = [(s.keys, s.seqs) for s in group]
             runs += [(s.keys, s.seqs) for s in over]
             keys, seqs = merge_backend.merge_runs(runs)
             self.stats.merged_keys += int(keys.shape[0])
             new = split_fixed(keys, seqs, cfg.kv_size, cfg.sst_size)
             self._replace_in_level(level + 1, over, new)
-            for s in group:
-                self.levels[level].remove(s)
+            guids = {s.uid for s in group}
+            self.levels[level] = [s for s in self.levels[level]
+                                  if s.uid not in guids]
+            self.index.remove_uids(level, list(guids))
             read_b += total_size(group) + total_size(over)
             write_b += sum(s.size for s in new)
             n_in += len(group) + len(over)
@@ -329,14 +336,32 @@ class LSMTree:
                                       deps)
 
     # --- shared helpers ------------------------------------------------------
+    def _overlap(self, level: int, lo: int, hi: int) -> list[SST]:
+        """SSTs of a sorted, disjoint level intersecting [lo, hi] — the
+        manifest's fence query (always a contiguous slice)."""
+        start, end = self.index.overlap_slice(level, lo, hi)
+        return self.levels[level][start:end]
+
     def _replace_in_level(self, level: int, old: list[SST],
                           new: list[SST]) -> None:
+        """Splice ``new`` into the level where ``old`` (a contiguous span of
+        the sorted level, possibly empty) sat; keeps the manifest arrays in
+        lock-step incrementally."""
+        new_live = [s for s in new if s.n > 0]
         lvl = self.levels[level]
-        old_ids = {s.uid for s in old}
-        kept = [s for s in lvl if s.uid not in old_ids]
-        merged = kept + [s for s in new if s.n > 0]
-        merged.sort(key=lambda s: s.smallest)
-        self.levels[level] = merged
+        if old:
+            old_ids = np.fromiter((s.uid for s in old), np.int64, len(old))
+            pos = np.nonzero(np.isin(self.index.uids[level], old_ids))[0]
+            start, end = int(pos[0]), int(pos[-1]) + 1
+            assert pos.shape[0] == end - start, \
+                "replaced SSTs must form a contiguous span"
+        elif new_live:
+            start = end = int(np.searchsorted(self.index.smallest[level],
+                                              new_live[0].smallest))
+        else:
+            return
+        self.levels[level] = lvl[:start] + new_live + lvl[end:]
+        self.index.splice(level, start, end, new_live)
 
     def _emit_compact_job(self, level: int, read_b: int, write_b: int,
                           n_in: int, n_out: int, deps: list[Job]) -> Job:
@@ -404,9 +429,7 @@ class LSMTree:
             if found is not None:
                 return found, reads, probed
         for level in range(1, self.cfg.max_levels):
-            lvl = self.levels[level]
-            cand = overlapping(lvl, key, key)
-            for sst in cand:
+            for sst in self._overlap(level, key, key):
                 probed += 1
                 found, did_read = self._probe_sst(sst, key)
                 reads += did_read
@@ -414,15 +437,102 @@ class LSMTree:
                     return found, reads, probed
         return None, reads, probed
 
+    def get_batch(self, keys: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized point lookups: ``(seqs, block_reads, ssts_probed)``.
+
+        Per-op semantics are identical to scalar :meth:`get` (same probe
+        order, same deterministic bloom false positives, same accounting);
+        misses report seq ``-1``.  All fence selection runs through the
+        :class:`LevelIndex` manifest, array-at-a-time.
+        """
+        keys = np.ascontiguousarray(keys, dtype=np.int64)
+        n = keys.shape[0]
+        seqs = np.full(n, -1, np.int64)
+        reads = np.zeros(n, np.int32)
+        probed = np.zeros(n, np.int32)
+        if n == 0:
+            return seqs, reads, probed
+        active = np.ones(n, bool)
+        # Memtable probes are free (no device reads), newest first.
+        for mt in [self.memtable] + self.immutables[::-1]:
+            if not active.any():
+                return seqs, reads, probed
+            idx = np.nonzero(active)[0]
+            got = mt.get_batch(keys[idx])
+            hit = got >= 0
+            if hit.any():
+                hidx = idx[hit]
+                seqs[hidx] = got[hit]
+                active[hidx] = False
+        # L0 newest -> oldest: every range-overlapping SST is probed.
+        l0 = self.levels[0]
+        for p in range(len(l0) - 1, -1, -1):
+            if not active.any():
+                return seqs, reads, probed
+            idx = np.nonzero(active)[0]
+            k = keys[idx]
+            inr = ((k >= self.index.smallest[0][p])
+                   & (k <= self.index.largest[0][p]))
+            if inr.any():
+                self._probe_sst_batch(l0[p], self.index.bloom[0][p], idx[inr],
+                                      keys, seqs, reads, probed, active)
+        # Leveled: at most one fence-selected SST per level; group the
+        # still-active keys by candidate SST and probe each group at once.
+        for level in range(1, self.cfg.max_levels):
+            if not active.any():
+                break
+            if self.index.n_ssts(level) == 0:
+                continue
+            idx = np.nonzero(active)[0]
+            k = keys[idx]
+            starts, ends = self.index.overlap_ranges(level, k, k)
+            cand = ends > starts
+            if not cand.any():
+                continue
+            cidx = idx[cand]
+            cpos = starts[cand]
+            order = np.argsort(cpos, kind="stable")
+            cidx, cpos = cidx[order], cpos[order]
+            uniq, first = np.unique(cpos, return_index=True)
+            bounds = np.append(first, cpos.shape[0])
+            lvl = self.levels[level]
+            blooms = self.index.bloom[level]
+            for u, a, b in zip(uniq, bounds[:-1], bounds[1:]):
+                self._probe_sst_batch(lvl[int(u)], blooms[int(u)], cidx[a:b],
+                                      keys, seqs, reads, probed, active)
+        return seqs, reads, probed
+
+    def _probe_sst_batch(self, sst: SST, bloom_seed: np.uint64,
+                         idx: np.ndarray, keys: np.ndarray, seqs: np.ndarray,
+                         reads: np.ndarray, probed: np.ndarray,
+                         active: np.ndarray) -> None:
+        """Probe one SST for the (in-range) ops at positions ``idx``."""
+        probed[idx] += 1
+        k = keys[idx]
+        pos = np.searchsorted(sst.keys, k)
+        pos = np.minimum(pos, sst.n - 1)
+        found = sst.keys[pos] == k
+        fidx = idx[found]
+        seqs[fidx] = sst.seqs[pos[found]]
+        reads[fidx] += 1     # bloom true positive -> one block read
+        active[fidx] = False
+        midx = idx[~found]
+        if midx.shape[0]:
+            fp = bloom_false_positives(keys[midx], bloom_seed,
+                                       self.cfg.bloom_fpr)
+            reads[midx] += fp.astype(np.int32)
+
     def _probe_sst(self, sst: SST, key: int) -> tuple[int | None, int]:
         seq = sst.get(key)
         if seq is not None:
             return seq, 1  # bloom true positive -> one block read
-        # Deterministic pseudo-random bloom false positive.
-        h = (key * 0x9E3779B97F4A7C15 + sst.uid * 0xBF58476D1CE4E5B9) & 0xFFFFFFFF
-        if (h / 0xFFFFFFFF) < self.cfg.bloom_fpr:
-            return None, 1
-        return None, 0
+        # Deterministic pseudo-random bloom false positive (same hash as the
+        # batched path in level_index.bloom_false_positives).
+        fp = bloom_false_positives(np.asarray([key], np.int64),
+                                   bloom_seed_for_uid(sst.uid),
+                                   self.cfg.bloom_fpr)
+        return None, int(fp[0])
 
     # -------------------------------------------------------------- misc
     def level_sizes(self) -> list[int]:
@@ -434,6 +544,7 @@ class LSMTree:
 
     def check_invariants(self) -> None:
         from .sst import level_check_disjoint
+        self.index.check_against(self.levels)
         for sst in self.levels[0]:
             sst.check_invariants()
         for level in range(1, self.cfg.max_levels):

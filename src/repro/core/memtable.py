@@ -22,6 +22,7 @@ class Memtable:
         self._keys: list[np.ndarray] = []
         self._seqs: list[np.ndarray] = []
         self._n = 0
+        self._sorted: tuple[np.ndarray, np.ndarray] | None = None
 
     @property
     def n(self) -> int:
@@ -45,6 +46,7 @@ class Memtable:
         self._keys.append(np.asarray(keys, dtype=np.int64))
         self._seqs.append(np.asarray(seqs, dtype=np.int64))
         self._n += int(keys.shape[0])
+        self._sorted = None
 
     def get(self, key: int) -> int | None:
         best = None
@@ -56,18 +58,35 @@ class Memtable:
         return best
 
     def to_sorted(self) -> tuple[np.ndarray, np.ndarray]:
-        """Sorted, latest-wins-deduplicated contents."""
+        """Sorted, latest-wins-deduplicated contents (cached until the next
+        put; callers must not mutate the returned arrays)."""
+        if self._sorted is not None:
+            return self._sorted
         keys = np.concatenate(self._keys) if self._keys else np.empty(0, np.int64)
         seqs = np.concatenate(self._seqs) if self._seqs else np.empty(0, np.int64)
         if keys.size == 0:
-            return keys, seqs
+            self._sorted = (keys, seqs)
+            return self._sorted
         # Stable sort on key keeps insertion order among equal keys; take the
         # last occurrence of each key (highest seq, since seqs increase).
         order = np.argsort(keys, kind="stable")
         keys, seqs = keys[order], seqs[order]
         last = np.ones(keys.shape[0], dtype=bool)
         last[:-1] = keys[1:] != keys[:-1]
-        return keys[last], seqs[last]
+        self._sorted = (keys[last], seqs[last])
+        return self._sorted
+
+    def get_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`get` over many keys; -1 marks a miss."""
+        out = np.full(keys.shape[0], -1, np.int64)
+        sk, ss = self.to_sorted()
+        if sk.shape[0] == 0:
+            return out
+        pos = np.searchsorted(sk, keys)
+        pos = np.minimum(pos, sk.shape[0] - 1)
+        hit = sk[pos] == keys
+        out[hit] = ss[pos[hit]]
+        return out
 
     def to_sst(self) -> SST:
         keys, seqs = self.to_sorted()

@@ -53,6 +53,8 @@ class SimResult:
     stats: Stats | None = None
     job_log: list[Job] = field(default_factory=list)
     makespan: float = 0.0
+    get_reads: np.ndarray | None = None    # per-op device block reads (GETs)
+    get_probed: np.ndarray | None = None   # per-op SSTs probed (GETs)
 
     def pct(self, q: float, op: int | None = None) -> float:
         lat = self.latency if op is None else self.latency[self.op_types == op]
@@ -197,6 +199,7 @@ class Simulator:
         kpm = cfg.keys_per_memtable
         service = np.where(op_types == 0, PUT_SERVICE, GET_CPU)
         get_reads = np.zeros(n, dtype=np.int32)
+        get_probed = np.zeros(n, dtype=np.int32)
         block_t = (self.device.io_latency
                    + self.device.block_size / self.device.read_bw)
 
@@ -220,8 +223,8 @@ class Simulator:
         prev = 0
         for op_i, region in fill_events:
             D = self._advance_clock(D, prev, op_i + 1, op_types, keys,
-                                    regions, get_reads, service, arrivals,
-                                    block_t)
+                                    regions, get_reads, get_probed, service,
+                                    arrivals, block_t)
             prev = op_i + 1
             t = D  # the fill happens when its last put is serviced
             tree = self.trees[region]
@@ -238,7 +241,7 @@ class Simulator:
                 D += stall
                 self.stall_events.append((op_i, stall))
         self._advance_clock(D, prev, n, op_types, keys, regions, get_reads,
-                            service, arrivals, block_t)
+                            get_probed, service, arrivals, block_t)
 
         # --- read service refinement: device busy while compactions run ----
         starts = np.sort(np.array([j.t_start for j in self.job_log
@@ -266,17 +269,21 @@ class Simulator:
             stall_max=float(stalls.max()) if stalls.size else 0.0,
             n_stalls=int(stalls.size), stats=self.stats,
             job_log=self.job_log, makespan=float(departures[-1]),
+            get_reads=get_reads, get_probed=get_probed,
         )
 
     # ------------------------------------------------------------------
     def _advance_clock(self, D: float, lo: int, hi: int, op_types, keys,
-                       regions, get_reads, service, arrivals,
+                       regions, get_reads, get_probed, service, arrivals,
                        block_t: float) -> float:
         """Apply ops [lo, hi) structurally and advance the processed clock.
 
         Returns the departure time of op hi-1 (before any stall injection).
-        GET service includes the base device-read cost here; the
-        busy-inflation term is refined in a vectorized post-pass.
+        GETs run as ONE vectorized ``LSMTree.get_batch`` per region per
+        window (tree state is constant for the window's reads: its puts are
+        applied first, and lookups don't mutate).  GET service includes the
+        base device-read cost here; the busy-inflation term is refined in a
+        vectorized post-pass.
         """
         if hi <= lo:
             return D
@@ -288,14 +295,20 @@ class Simulator:
             mask = (w_types == 0) & (w_regions == r)
             if mask.any():
                 self.trees[r].put_batch(w_keys[mask])
-        g_idx = np.nonzero(w_types == 1)[0]
-        for gi in g_idx:
-            r = int(w_regions[gi])
-            _seq, reads, _probed = self.trees[r].get(int(w_keys[gi]))
-            get_reads[lo + gi] = reads
-            self.stats.device_reads += reads
-            self.stats.ops += 1
-        service[sl][g_idx] += get_reads[sl][g_idx] * block_t
+        g_mask = w_types == 1
+        if g_mask.any():
+            for r in range(self.n_regions):
+                rm = g_mask & (w_regions == r) if self.n_regions > 1 else g_mask
+                if not rm.any():
+                    continue
+                ri = np.nonzero(rm)[0]
+                _seqs, b_reads, b_probed = self.trees[r].get_batch(w_keys[ri])
+                get_reads[lo + ri] = b_reads
+                get_probed[lo + ri] = b_probed
+                self.stats.device_reads += int(b_reads.sum())
+                self.stats.ops += int(ri.shape[0])
+            g_idx = np.nonzero(g_mask)[0]
+            service[sl][g_idx] += get_reads[sl][g_idx] * block_t
         # incremental Lindley: D_j = S_j + max(D_prev, max_k(a_k - S_{k-1}))
         s = service[sl].astype(np.float64)
         s_cum = np.cumsum(s)

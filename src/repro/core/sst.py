@@ -85,20 +85,16 @@ def total_size(ssts: list[SST]) -> int:
 def overlapping(ssts: list[SST], lo: int, hi: int) -> list[SST]:
     """SSTs from a *sorted, disjoint* level whose range intersects [lo, hi].
 
-    Uses the level's fence pointers (smallest keys) for O(log n) selection,
-    mirroring the manifest-range scan a real store performs.
+    The list-level oracle for the store's manifest queries: the LSM core
+    itself routes through ``repro.core.level_index.LevelIndex``, which
+    answers with the same two fence ranks over its flat arrays — the span
+    is [first SST with largest >= lo, first SST with smallest > hi).
     """
     if not ssts:
         return []
-    smallest = np.fromiter((s.smallest for s in ssts), dtype=np.int64,
-                           count=len(ssts))
-    # first SST whose range could reach lo: the one before the first with
-    # smallest > lo (its largest may still be >= lo).
-    start = int(np.searchsorted(smallest, lo, side="right")) - 1
-    if start < 0:
-        start = 0
-    if ssts[start].largest < lo:
-        start += 1
+    smallest = np.fromiter((s.smallest for s in ssts), np.int64, len(ssts))
+    largest = np.fromiter((s.largest for s in ssts), np.int64, len(ssts))
+    start = int(np.searchsorted(largest, lo, side="left"))
     end = int(np.searchsorted(smallest, hi, side="right"))
     return ssts[start:end]
 

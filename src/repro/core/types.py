@@ -83,6 +83,10 @@ class LSMConfig:
     vsst_min_frac: float | None = None  # S_m = S_M * frac; default 1/f
     # --- lookup model -----------------------------------------------------
     bloom_fpr: float = 0.01             # bloom-filter false-positive rate
+    # LevelIndex rank backend: None follows repro.core.level_index's module
+    # switch (numpy by default); "jnp" / "pallas" pin this store's manifest
+    # queries to the array backends (parity-tested drop-ins).
+    index_backend: str | None = None
 
     # ----------------------------------------------------------------------
     @property

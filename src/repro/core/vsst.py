@@ -140,8 +140,9 @@ def plan_vssts(keys: np.ndarray, kv_size: int, s_m: int, s_M: int, f: int,
 
 def select_good_vssts(l1_ssts: list[SST], fence_lo: np.ndarray,
                       fence_hi: np.ndarray, sst_size_l2: int, f: int,
-                      bytes_needed: int) -> list[int]:
-    """§4.2.2: RocksDB's ratio scheduler over vSSTs.
+                      bytes_needed: int, ov: np.ndarray | None = None
+                      ) -> list[int]:
+    """§4.2.2: RocksDB's ratio scheduler over vSSTs, fully vectorized.
 
     Ranks every L1 vSST by ``overlap_bytes_in_L2 / size`` ascending (largest
     size with least overlap first), keeps only *good* candidates
@@ -149,22 +150,33 @@ def select_good_vssts(l1_ssts: list[SST], fence_lo: np.ndarray,
     ``bytes_needed`` (== S_M, space for the next L0 SST).  Returns indices
     into ``l1_ssts``; empty only if L1 holds no good vSST (the paper's Φ=64
     failure mode, reproduced in benchmark fig13).
+
+    ``ov`` — per-vSST L2 overlap counts — may be supplied precomputed (the
+    LSM core passes one batched ``LevelIndex.overlap_counts`` query);
+    otherwise it is derived here from the fence arrays.
     """
     if not l1_ssts:
         return []
-    ratios = []
-    for idx, s in enumerate(l1_ssts):
-        ov = overlap_count_range(fence_lo, fence_hi, s.smallest, s.largest)
-        ov_bytes = ov * sst_size_l2
-        good = ov <= f
-        ratios.append((ov_bytes / max(1, s.size), -s.size, idx, good))
-    ratios.sort()
+    n = len(l1_ssts)
+    sizes = np.fromiter((s.size for s in l1_ssts), np.int64, n)
+    if ov is None:
+        s_lo = np.fromiter((s.smallest for s in l1_ssts), np.int64, n)
+        s_hi = np.fromiter((s.largest for s in l1_ssts), np.int64, n)
+        if fence_lo.size:
+            first = np.searchsorted(fence_hi, s_lo, side="left")
+            last = np.searchsorted(fence_lo, s_hi, side="right")
+            ov = np.maximum(0, last - first)
+        else:
+            ov = np.zeros(n, np.int64)
+    ratio = ov * np.int64(sst_size_l2) / np.maximum(1, sizes)
+    order = np.lexsort((np.arange(n), -sizes, ratio))
     picked, freed = [], 0
-    for _ratio, _negsz, idx, good in ratios:
-        if not good:
+    for idx in order:
+        if ov[idx] > f:        # poor vSST: never picked by the scheduler
             continue
+        idx = int(idx)
         picked.append(idx)
-        freed += l1_ssts[idx].size
+        freed += int(sizes[idx])
         if freed >= bytes_needed:
             break
     return picked

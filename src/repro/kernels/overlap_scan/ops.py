@@ -37,6 +37,18 @@ def fence_rank_np(fences: np.ndarray, keys: np.ndarray,
     return np.asarray(out)[:keys.shape[0]]
 
 
+def fence_rank_strict_np(fences: np.ndarray, keys: np.ndarray,
+                         interpret: bool = True) -> np.ndarray:
+    """#fences < key, per key (== np.searchsorted(fences, keys, 'left')).
+
+    Integer keys only: the strict rank is the inclusive rank of ``key - 1``.
+    This is the second primitive ``repro.core.level_index`` needs for its
+    ``pallas`` backend (start-of-overlap = strict rank of ``lo`` over the
+    level's ``largest`` fences).
+    """
+    return fence_rank_np(fences, np.asarray(keys, np.int64) - 1, interpret)
+
+
 def overlap_counts_np(fence_lo: np.ndarray, fence_hi: np.ndarray,
                       key_lo: np.ndarray, key_hi: np.ndarray,
                       interpret: bool = True) -> np.ndarray:

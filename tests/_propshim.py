@@ -1,0 +1,70 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` so the tier-1 suite
+runs in environments without it (e.g. the hermetic bench container).
+
+Install the real thing (``pip install -r requirements-dev.txt``) for actual
+shrinking/coverage; this shim just replays ``max_examples`` seeded random
+draws per test.  Only the strategy surface the test-suite uses is provided:
+``st.integers`` and ``st.lists``.
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+def settings(max_examples: int = 20, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    # NOTE: no functools.wraps — pytest would inspect the wrapped signature
+    # and try to inject the drawn arguments as fixtures.
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples", None) \
+                or getattr(fn, "_shim_max_examples", 20)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                fn(*(s.draw(rng) for s in strats))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._shim_max_examples = getattr(fn, "_shim_max_examples", None)
+        return wrapper
+    return deco

@@ -8,5 +8,9 @@ from pathlib import Path
 SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
+# tests/ itself, for the hypothesis fallback shim (_propshim)
+TESTS = Path(__file__).resolve().parent
+if str(TESTS) not in sys.path:
+    sys.path.insert(0, str(TESTS))
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")

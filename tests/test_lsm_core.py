@@ -2,8 +2,12 @@
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:      # hermetic env: deterministic mini-shim
+    from _propshim import HealthCheck, given, settings, st
 
 from repro.core import LSMConfig, LSMTree, Policy, Simulator, DeviceModel
 from repro.core import merge as merge_backend
