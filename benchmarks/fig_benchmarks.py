@@ -169,6 +169,24 @@ def fig12_ycsb_sweep(n_load=50_000, n_run=30_000):
                  round(r.cycles_per_op(), 0), "CPU proxy")
 
 
+# ------------------------------------------------------------- scan tails
+def scan_tails(n_load=50_000, n_run=20_000):
+    """YCSB-E (95% scan / 5% insert) while a writer streams at a fixed
+    rate — the read-tail story (paper §6.3) extended to range scans via
+    the db_bench seekrandom-while-writing methodology."""
+    from repro.bench_kv.db_bench import seekrandom
+    for sys_name, cfg in (("vlsm8", vlsm_cfg(8)),
+                          ("rocksdb", rocksdb_cfg()),
+                          ("rocksdb_io", rocksdb_io_cfg()),
+                          ("adoc", adoc_cfg()),
+                          ("lsmi", lsmi_cfg())):
+        row = seekrandom(cfg, n_run, n_load, scale=SCALE)
+        emit(f"scan_e.p99_scan_ms.{sys_name}", row["p99_scan_ms"], "")
+        emit(f"scan_e.p50_scan_ms.{sys_name}", row["p50_scan_ms"], "")
+        emit(f"scan_e.files_per_scan.{sys_name}", row["scan_files_per_op"],
+             "seek fan-out (L0 + one per level)")
+
+
 # --------------------------------------------------------------- Figure 13
 def fig13_phi_sensitivity(n=50_000):
     """I/O amp + good-vSST fraction vs Φ (Fig 13 a,b) and key
@@ -222,6 +240,7 @@ ALL = {
     "fig11": fig11_cdf,
     "fig12": fig12_ycsb_sweep,
     "fig13": fig13_phi_sensitivity,
+    "scan_e": scan_tails,
     "tab01": tab01_sst_size,
 }
 

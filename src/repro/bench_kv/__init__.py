@@ -1,11 +1,16 @@
-"""Workload drivers: YCSB (§5, open-loop modified YCSB) and db_bench."""
+"""Workload drivers: YCSB (§5, open-loop modified YCSB) and db_bench.
+
+Op streams are typed (:class:`repro.core.OpKind`): PUT/GET/DELETE/SCAN;
+``make_run_e`` is the scan-heavy YCSB-E mix.
+"""
 
 from .workloads import (WorkloadSpec, make_load_a, make_run_a, make_run_b,
-                        make_run_c, make_run_d, zipf_keys)
+                        make_run_c, make_run_d, make_run_e, pareto_keys,
+                        zipf_keys)
 from .ycsb import YCSBResult, run_ycsb, sustainable_throughput
 
 __all__ = [
     "WorkloadSpec", "YCSBResult", "make_load_a", "make_run_a", "make_run_b",
-    "make_run_c", "make_run_d", "run_ycsb", "sustainable_throughput",
-    "zipf_keys",
+    "make_run_c", "make_run_d", "make_run_e", "pareto_keys", "run_ycsb",
+    "sustainable_throughput", "zipf_keys",
 ]

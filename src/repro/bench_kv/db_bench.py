@@ -22,10 +22,10 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import DeviceModel, LSMConfig, Simulator
+from repro.core import DeviceModel, LSMConfig, OpKind, Simulator
 from repro.core import level_index
 
-from .workloads import load_keys, make_run_c, pareto_keys
+from .workloads import load_keys, make_run_c, make_run_e, pareto_keys
 
 
 def fillrandom(cfg: LSMConfig, n_ops: int, *, dist: str = "uniform",
@@ -80,6 +80,73 @@ def read_path(cfg: LSMConfig, n_ops: int = 200_000, n_pop: int = 100_000, *,
     }
 
 
+def seekrandom(cfg: LSMConfig, n_ops: int = 40_000, n_pop: int = 60_000, *,
+               scale: int | None = None, rate: float = 300.0,
+               write_rate: float = 800.0, settle_s: float = 30.0,
+               seed: int = 7) -> dict:
+    """Scan-tail probe: YCSB-E SCANs measured while a writer streams —
+    db_bench's ``seekrandomwhilewriting`` counterpart.
+
+    Methodology: load-phase flood, a ``settle_s`` compaction settle
+    (YCSB's wait between load and run), then the measured run: the YCSB-E
+    mix (95% zipfian SCANs / 5% inserts) arrives at ``rate`` while a
+    background writer streams fresh keys at the same fixed ``write_rate``
+    for every policy (db_bench's ``--benchmark_write_rate_limit``
+    convention; the default sits inside every policy's sustainable region
+    at the benchmark scale).  The scan tail then captures how each
+    policy's compaction behaviour — chain width, write stalls, device
+    busy time — bleeds into foreground range queries: the paper's
+    read-tail mechanism (P99 reads up to 12.5x), extended to scans.
+    vLSM's narrow chains keep its scan P99 low while its continuous small
+    compactions cost a little median; RocksDB's wide tiering merges stall
+    the queue and blow up the tail."""
+    scale = scale or cfg.memtable_size
+    lam = scale / (64 << 20)
+    w_rate = write_rate
+    pop = np.unique(load_keys(n_pop, seed))
+    spec = make_run_e(pop, n_ops, dist="zipfian", seed=seed + 3)
+    load_arrivals = np.arange(pop.shape[0], dtype=np.float64) / 1e6
+    t_run = load_arrivals[-1] + settle_s
+    run_arrivals = t_run + np.arange(n_ops, dtype=np.float64) / rate
+    n_wr = int(n_ops / rate * w_rate)
+    writer_keys = load_keys(n_wr, seed + 9)
+    writer_arrivals = t_run + np.arange(n_wr, dtype=np.float64) / w_rate
+    op_types = np.concatenate([np.zeros(pop.shape[0], np.uint8),
+                               spec.op_types,
+                               np.zeros(n_wr, np.uint8)])
+    keys = np.concatenate([pop, spec.keys, writer_keys])
+    scan_lens = np.concatenate([np.zeros(pop.shape[0], np.int32),
+                                spec.scan_lens,
+                                np.zeros(n_wr, np.int32)])
+    arrivals = np.concatenate([load_arrivals, run_arrivals, writer_arrivals])
+    order = np.argsort(arrivals, kind="stable")
+    sim = Simulator(cfg, DeviceModel.scaled(lam))
+    t0 = time.perf_counter()
+    res = sim.run(op_types[order], keys[order], arrivals[order],
+                  scan_lens=scan_lens[order])
+    wall = time.perf_counter() - t0
+    sc = res.op_types == OpKind.SCAN
+    n_scans = max(1, int(sc.sum()))
+    # Stall columns cover the measured (while-writing) phase only — the
+    # load flood stalls every policy by construction and would otherwise
+    # drown the writer's signal.  Load ops arrive first, so run-phase ops
+    # are exactly the indices >= the population size.
+    run_stalls = [d for i, d in sim.stall_events if i >= pop.shape[0]]
+    return {
+        "bench": "seekrandom", "workload": "run_e_while_writing",
+        "policy": cfg.policy.value, "ops": n_ops,
+        "write_rate_ops_s": int(w_rate),
+        "p99_scan_ms": round(res.pct(99, op=int(OpKind.SCAN)) * 1e3, 3),
+        "p50_scan_ms": round(res.pct(50, op=int(OpKind.SCAN)) * 1e3, 3),
+        "scan_blocks_per_op": round(sim.stats.scan_blocks / n_scans, 2),
+        "scan_files_per_op": round(float(res.get_probed[sc].mean()), 2),
+        "stall_total_s": round(sum(run_stalls), 4),
+        "stall_max_ms": round(max(run_stalls, default=0.0) * 1e3, 2),
+        "wall_clock_s": round(wall, 3),
+        "index_backend": cfg.index_backend or level_index.get_backend(),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default="BENCH_dbbench.json",
@@ -91,6 +158,8 @@ def main(argv=None):
     n_fill = 12_000 if args.quick else 120_000
     n_read = 20_000 if args.quick else 200_000
     n_pop = 10_000 if args.quick else 100_000
+    n_scan = 4_000 if args.quick else 40_000
+    n_scan_pop = 10_000 if args.quick else 60_000
 
     rows = []
     for dist in ("uniform", "pareto"):
@@ -106,6 +175,17 @@ def main(argv=None):
         row = read_path(cfg, n_read, n_pop, scale=scale)
         rows.append(row)
         print(f"db_bench.read_path.{name}: {row}")
+    # seekrandom / YCSB-E: scan tails for ALL five policies at the same
+    # memory budget (same `scale`) and the same request rate.
+    for name, cfg in (
+            ("vlsm", LSMConfig.vlsm_default(scale=scale)),
+            ("rocksdb", LSMConfig.rocksdb_default(scale=scale)),
+            ("rocksdb_io", LSMConfig.rocksdb_io_default(scale=scale)),
+            ("adoc", LSMConfig.adoc_default(scale=scale)),
+            ("lsmi", LSMConfig.lsmi_default(scale=scale))):
+        row = seekrandom(cfg, n_scan, n_scan_pop, scale=scale)
+        rows.append(row)
+        print(f"db_bench.seekrandom.{name}: {row}")
     if args.json:
         Path(args.json).write_text(json.dumps(rows, indent=1))
         print(f"wrote {args.json} ({len(rows)} rows)")

@@ -2,8 +2,12 @@
 
 The paper's methodology (§5): YCSB Load A (100% insert) for write tails,
 Run A (50r/50u), Run B (95r/5u), Run C (100r), Run D (95 read-latest /
-5 insert); uniform and Zipfian(0.99) request distributions; db_bench-style
-fillrandom with uniform and Pareto key popularity (Meta's production mix).
+5 insert), Run E (95 scan / 5 insert — the range-query workload); uniform
+and Zipfian(0.99) request distributions; db_bench-style fillrandom with
+uniform and Pareto key popularity (Meta's production mix).
+
+Op streams are typed (:class:`repro.core.OpKind`): 0 PUT, 1 GET, 2 DELETE,
+3 SCAN; SCAN ops carry a per-op requested key count in ``scan_lens``.
 """
 
 from __future__ import annotations
@@ -12,14 +16,17 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core import OpKind
+
 KEYSPACE = 1 << 48
 
 
 @dataclass
 class WorkloadSpec:
     name: str
-    op_types: np.ndarray       # 0 = put, 1 = get
+    op_types: np.ndarray       # OpKind values
     keys: np.ndarray
+    scan_lens: np.ndarray | None = None   # per-op SCAN key count (None: no scans)
 
 
 def _rng(seed: int) -> np.random.Generator:
@@ -53,11 +60,22 @@ def zipf_keys(population: np.ndarray, n: int, theta: float = 0.99,
 
 def pareto_keys(population: np.ndarray, n: int, alpha: float = 1.16,
                 seed: int = 13) -> np.ndarray:
-    """Pareto popularity (db_bench's Meta-production-like distribution)."""
+    """Pareto popularity (db_bench's Meta-production-like distribution).
+
+    Rank *i* gets the exact probability mass of the Pareto (Lomax) density
+    on [i, i+1) — ``w_i = (1+i)^-alpha - (2+i)^-alpha`` — sampled by
+    inverse-CDF over the normalized cumsum, mirroring :func:`zipf_keys`.
+    A rank's popularity is a fixed function of (rank, alpha, m): unlike
+    the old ``raw / raw.max()`` normalization, it does not depend on the
+    sample size ``n`` (the max of ``n`` Pareto draws grows with ``n``, so
+    the old mapping reshuffled popularity whenever ``n`` changed).
+    """
     m = population.shape[0]
-    r = _rng(seed)
-    raw = r.pareto(alpha, size=n)
-    idx = np.minimum((raw / (raw.max() + 1e-9) * m).astype(np.int64), m - 1)
+    edges = np.arange(m + 1, dtype=np.float64)
+    cdf = np.cumsum((1.0 + edges[:-1]) ** -alpha - (1.0 + edges[1:]) ** -alpha)
+    cdf /= cdf[-1]
+    u = _rng(seed).random(n)
+    idx = np.searchsorted(cdf, u, side="left")
     perm = _rng(seed + 1).permutation(m)
     return population[perm[idx]]
 
@@ -92,6 +110,31 @@ def make_run_b(population: np.ndarray, n: int, dist: str = "uniform",
 def make_run_c(population: np.ndarray, n: int, dist: str = "uniform",
                seed: int = 25) -> WorkloadSpec:
     return _mixed("run_c", population, n, 1.0, dist, seed)
+
+
+def make_run_e(population: np.ndarray, n: int, dist: str = "zipfian",
+               seed: int = 29, max_scan_len: int = 100) -> WorkloadSpec:
+    """YCSB-E: 95% SCAN / 5% insert.  Scan start keys follow the request
+    distribution; scan lengths are uniform in [1, max_scan_len] (the YCSB
+    default).  Inserts add fresh keys, as YCSB-E's INSERT phase does."""
+    r = _rng(seed)
+    op_types = np.where(r.random(n) < 0.95, np.uint8(OpKind.SCAN),
+                        np.uint8(OpKind.PUT))
+    keys = np.empty(n, np.int64)
+    inserts = np.nonzero(op_types == OpKind.PUT)[0]
+    keys[inserts] = load_keys(inserts.shape[0], seed + 1)
+    scans = np.nonzero(op_types == OpKind.SCAN)[0]
+    if dist == "zipfian":
+        starts = zipf_keys(population, scans.shape[0], seed=seed + 2)
+    elif dist == "pareto":
+        starts = pareto_keys(population, scans.shape[0], seed=seed + 2)
+    else:
+        starts = population[r.integers(0, population.shape[0],
+                                       size=scans.shape[0])]
+    keys[scans] = starts
+    scan_lens = np.zeros(n, np.int32)
+    scan_lens[scans] = r.integers(1, max_scan_len + 1, size=scans.shape[0])
+    return WorkloadSpec("run_e", op_types, keys, scan_lens)
 
 
 def make_run_d(population: np.ndarray, n: int, seed: int = 27) -> WorkloadSpec:

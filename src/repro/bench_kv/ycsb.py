@@ -66,13 +66,16 @@ def run_ycsb(cfg: LSMConfig, spec: WorkloadSpec, rate: float,
     sim = Simulator(cfg, device, n_regions=n_regions)
 
     op_types, keys = spec.op_types, spec.keys
+    scan_lens = spec.scan_lens
     n_pre = 0
     if preload is not None and preload.size:
         n_pre = preload.shape[0]
         op_types = np.concatenate([np.zeros(n_pre, np.uint8), op_types])
         keys = np.concatenate([preload, keys])
+        if scan_lens is not None:
+            scan_lens = np.concatenate([np.zeros(n_pre, np.int32), scan_lens])
     arrivals = np.arange(op_types.shape[0], dtype=np.float64) / rate
-    res = sim.run(op_types, keys, arrivals)
+    res = sim.run(op_types, keys, arrivals, scan_lens=scan_lens)
     if n_pre:
         # report latency/percentiles on the measured phase only
         res = SimResult(

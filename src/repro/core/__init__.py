@@ -2,7 +2,12 @@
 
 Public API::
 
-    from repro.core import LSMConfig, Policy, DeviceModel, LSMTree, Simulator
+    from repro.core import (LSMConfig, Policy, DeviceModel, LSMTree,
+                            Simulator, OpKind, RequestBatch, ResultBatch)
+
+``LSMTree.apply_batch(RequestBatch) -> ResultBatch`` is the single typed
+operation entry point (PUT/GET/DELETE/SCAN); ``put_batch`` / ``get_batch``
+/ ``delete_batch`` / ``scan_batch`` are thin wrappers over it.
 """
 
 from .level_index import LevelIndex
@@ -11,10 +16,11 @@ from .memtable import Memtable
 from .sim import SimResult, Simulator
 from .sst import SST
 from .stats import ChainRecord, Stats
-from .types import DeviceModel, LSMConfig, Policy
+from .types import (DeviceModel, LSMConfig, OpKind, Policy, RequestBatch,
+                    ResultBatch)
 
 __all__ = [
     "ChainRecord", "DeviceModel", "Job", "LSMConfig", "LSMTree",
-    "LevelIndex", "Memtable", "Policy", "SST", "SimResult", "Simulator",
-    "Stats",
+    "LevelIndex", "Memtable", "OpKind", "Policy", "RequestBatch",
+    "ResultBatch", "SST", "SimResult", "Simulator", "Stats",
 ]

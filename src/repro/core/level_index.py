@@ -202,6 +202,22 @@ class LevelIndex:
         starts, ends = self.overlap_ranges(level, lo, hi)
         return np.maximum(0, ends - starts)
 
+    def scan_spans(self, level: int, start_keys: np.ndarray,
+                   nbytes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Per-scan SST position spans [start_i, end_i) of a sorted level
+        covering a forward range scan: from the first SST whose range can
+        contain ``start_keys[i]`` (the same backend-routed fence rank that
+        answers point overlaps) until the span holds >= ``nbytes[i]`` of
+        data or the level ends."""
+        starts = _rank(self.largest[level], start_keys, "left", self.backend)
+        n = self.n_ssts(level)
+        if n == 0:
+            return starts, starts
+        csum = self.size_prefix(level)
+        need = csum[np.minimum(starts, n)] + np.asarray(nbytes, np.int64)
+        ends = np.searchsorted(csum, need, side="left").astype(np.int64)
+        return starts, np.clip(ends, starts, n)
+
     def size_prefix(self, level: int) -> np.ndarray:
         """csum[i] = total bytes of the level's first i SSTs (cached)."""
         if self._csum[level] is None:

@@ -30,12 +30,12 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import merge as merge_backend
-from .level_index import (LevelIndex, bloom_false_positives,
-                          bloom_seed_for_uid)
+from .level_index import LevelIndex, bloom_false_positives
 from .memtable import Memtable
 from .sst import SST, split_fixed, total_size
 from .stats import ChainRecord, Stats
-from .types import LSMConfig, Policy
+from .types import (LSMConfig, OpKind, Policy, RequestBatch, ResultBatch,
+                    seq_decode, seq_encode)
 from .vsst import plan_vssts, select_good_vssts
 
 _job_ids = itertools.count()
@@ -82,16 +82,74 @@ class LSMTree:
         self.seq = 0
         self.pending_jobs: list[Job] = []
 
+    # --------------------------------------------------- typed entry point
+    def apply_batch(self, batch: RequestBatch) -> ResultBatch:
+        """THE operation entry point: apply one typed request batch.
+
+        Writes (PUT + DELETE, in array order) land first, then GETs and
+        SCANs observe the post-write state — matching the DES, whose window
+        boundaries guarantee reads see every write that precedes them.
+        ``put_batch`` / ``delete_batch`` / ``get_batch`` / ``scan_batch``
+        are thin wrappers over this.  Assigned seqnos are also written back
+        into ``batch.seqnos``.
+        """
+        kinds = batch.kinds
+        n = len(batch)
+        seqs_out = np.full(n, -1, np.int64)
+        reads = np.zeros(n, np.int32)
+        probed = np.zeros(n, np.int32)
+        offsets = np.zeros(n + 1, np.int64)
+        scan_keys = scan_seqs = np.empty(0, np.int64)
+        w = batch.mask(OpKind.PUT, OpKind.DELETE)
+        if w.any():
+            widx = np.nonzero(w)[0]
+            assigned = self._write_batch(batch.keys[widx],
+                                         kinds[widx] == OpKind.DELETE)
+            seqs_out[widx] = assigned
+            batch.seqnos[widx] = assigned
+        g = kinds == OpKind.GET
+        if g.any():
+            gidx = np.nonzero(g)[0]
+            s, r, p = self._lookup_batch(batch.keys[gidx])
+            seqs_out[gidx] = s
+            reads[gidx] = r
+            probed[gidx] = p
+        sc = kinds == OpKind.SCAN
+        if sc.any():
+            sidx = np.nonzero(sc)[0]
+            counts, r, p, scan_keys, scan_seqs = self._scan_impl(
+                batch.keys[sidx], batch.scan_lens[sidx])
+            seqs_out[sidx] = counts
+            reads[sidx] = r
+            probed[sidx] = p
+            lens = np.zeros(n, np.int64)
+            lens[sidx] = counts
+            np.cumsum(lens, out=offsets[1:])
+        return ResultBatch(kinds, seqs_out, reads, probed, offsets,
+                           scan_keys, scan_seqs)
+
     # ------------------------------------------------------------ ingest
     def put_batch(self, keys: np.ndarray) -> np.ndarray:
         """Insert keys (must fit in the active memtable); returns their seqs."""
+        return self.apply_batch(RequestBatch.puts(keys)).seqs
+
+    def delete_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Write DELETE tombstones for keys; returns their seqs.  Markers
+        flow memtable → SST → merges and are reclaimed at the bottom level."""
+        return self.apply_batch(RequestBatch.deletes(keys)).seqs
+
+    def _write_batch(self, keys: np.ndarray, tombs: np.ndarray) -> np.ndarray:
+        """Append PUT/DELETE entries in array order; returns logical seqs."""
         n = int(keys.shape[0])
         assert n <= self.memtable.room, "caller must chunk at memtable capacity"
         seqs = np.arange(self.seq, self.seq + n, dtype=np.int64)
         self.seq += n
-        self.memtable.put_batch(np.asarray(keys, np.int64), seqs)
+        tombs = np.asarray(tombs, bool)
+        self.memtable.put_batch(np.asarray(keys, np.int64),
+                                seq_encode(seqs, tombs))
         self.stats.user_bytes += n * self.cfg.kv_size
         self.stats.ops += n
+        self.stats.delete_ops += int(tombs.sum())
         return seqs
 
     def seal_memtable(self) -> None:
@@ -131,17 +189,32 @@ class LSMTree:
 
     # ------------------------------------------------------- compactions
     def _compact_l0_trigger(self) -> list[Job]:
-        """L0 is at its trigger: run the policy's L0 compaction, recording
-        the full chain (deeper stages first).  Returns jobs deepest-first;
-        the last job is the L0 stage."""
-        jobs, stage_bytes = self._compact_from(0)
-        levels_touched = {j.level for j in jobs}
-        self.stats.chains.append(ChainRecord(
-            length=len(levels_touched),
-            width_bytes=sum(j.total_bytes for j in jobs),
-            stage_bytes=stage_bytes,
-        ))
-        return jobs
+        """L0 is at its trigger: run the policy's L0 compaction until the
+        file count is back below the trigger, recording each pass as a
+        chain (deeper stages first within a pass; the overall last job is
+        the final L0 stage).
+
+        Tiering designs clear L0 wholesale in one pass.  Non-tiering
+        designs pop ONE FIFO SST per pass, so after a burst piled up extra
+        L0 SSTs the loop keeps draining — like a real compaction scheduler,
+        which re-picks L0 while the file count scores at/above the trigger
+        rather than once per flush.  In steady state the loop body runs
+        exactly once, leaving structural sequencing on non-bursty traces
+        unchanged.
+        """
+        all_jobs: list[Job] = []
+        while len(self.levels[0]) >= self.cfg.l0_max_ssts:
+            jobs, stage_bytes = self._compact_from(0)
+            if not jobs:
+                break
+            levels_touched = {j.level for j in jobs}
+            self.stats.chains.append(ChainRecord(
+                length=len(levels_touched),
+                width_bytes=sum(j.total_bytes for j in jobs),
+                stage_bytes=stage_bytes,
+            ))
+            all_jobs.extend(jobs)
+        return all_jobs
 
     def _compact_from(self, level: int) -> tuple[list[Job], list[int]]:
         """Compact from ``level`` into ``level+1``, first ensuring space
@@ -198,6 +271,7 @@ class LSMTree:
         runs += [(s.keys, s.seqs) for s in l1_over]
         keys, seqs = merge_backend.merge_runs(runs)
         self.stats.merged_keys += int(keys.shape[0])
+        keys, seqs = self._strip_bottom_tombstones(1, keys, seqs)
         new = split_fixed(keys, seqs, self.cfg.kv_size, self.cfg.sst_size)
         self._replace_in_level(1, l1_over, new)
         read_b = total_size(l0) + total_size(l1_over)
@@ -221,6 +295,7 @@ class LSMTree:
         runs = [(src.keys, src.seqs)] + [(s.keys, s.seqs) for s in l1_over]
         keys, seqs = merge_backend.merge_runs(runs)
         self.stats.merged_keys += int(keys.shape[0])
+        keys, seqs = self._strip_bottom_tombstones(1, keys, seqs)
         if self.cfg.policy == Policy.VLSM:
             new = self._build_vssts(keys, seqs)
         else:
@@ -322,6 +397,7 @@ class LSMTree:
             runs += [(s.keys, s.seqs) for s in over]
             keys, seqs = merge_backend.merge_runs(runs)
             self.stats.merged_keys += int(keys.shape[0])
+            keys, seqs = self._strip_bottom_tombstones(level + 1, keys, seqs)
             new = split_fixed(keys, seqs, cfg.kv_size, cfg.sst_size)
             self._replace_in_level(level + 1, over, new)
             guids = {s.uid for s in group}
@@ -336,6 +412,22 @@ class LSMTree:
                                       deps)
 
     # --- shared helpers ------------------------------------------------------
+    def _strip_bottom_tombstones(self, target_level: int, keys: np.ndarray,
+                                 seqs: np.ndarray
+                                 ) -> tuple[np.ndarray, np.ndarray]:
+        """Drop DELETE markers from a merge writing the bottom level — no
+        older version can exist below it, so the marker is reclaimable."""
+        if target_level != self.cfg.max_levels - 1 or keys.shape[0] == 0:
+            return keys, seqs
+        tomb = (seqs & 1).astype(bool)
+        nd = int(tomb.sum())
+        if nd == 0:
+            return keys, seqs
+        self.stats.tombstones_dropped += nd
+        self.stats.tombstone_bytes_dropped += nd * self.cfg.kv_size
+        keep = ~tomb
+        return keys[keep], seqs[keep]
+
     def _overlap(self, level: int, lo: int, hi: int) -> list[SST]:
         """SSTs of a sorted, disjoint level intersecting [lo, hi] — the
         manifest's fence query (always a contiguous slice)."""
@@ -405,47 +497,29 @@ class LSMTree:
     def get(self, key: int) -> tuple[int | None, int, int]:
         """Point lookup.  Returns (seq|None, device_block_reads, ssts_probed).
 
-        Probes: memtables (free), L0 newest→oldest (every overlapping SST),
-        then one fence-selected SST per level.  A bloom filter screens device
-        reads; false positives are modeled with a deterministic hash at the
-        configured FPR.
+        A single-key :meth:`get_batch`: memtables (free), L0 newest→oldest
+        (every overlapping SST), then one fence-selected SST per level; a
+        bloom filter screens device reads with deterministic false
+        positives.  A key whose newest entry is a DELETE tombstone returns
+        ``None`` (the marker's block read is still charged).
         """
-        key = int(key)
-        reads = 0
-        probed = 0
-        hit = self.memtable.get(key)
-        if hit is not None:
-            return hit, reads, probed
-        for mt in reversed(self.immutables):
-            hit = mt.get(key)
-            if hit is not None:
-                return hit, reads, probed
-        for sst in reversed(self.levels[0]):
-            if not sst.may_contain(key):
-                continue
-            probed += 1
-            found, did_read = self._probe_sst(sst, key)
-            reads += did_read
-            if found is not None:
-                return found, reads, probed
-        for level in range(1, self.cfg.max_levels):
-            for sst in self._overlap(level, key, key):
-                probed += 1
-                found, did_read = self._probe_sst(sst, key)
-                reads += did_read
-                if found is not None:
-                    return found, reads, probed
-        return None, reads, probed
+        seqs, reads, probed = self.get_batch(np.asarray([key], np.int64))
+        s = int(seqs[0])
+        return (None if s < 0 else s), int(reads[0]), int(probed[0])
 
     def get_batch(self, keys: np.ndarray
                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Vectorized point lookups: ``(seqs, block_reads, ssts_probed)``.
 
-        Per-op semantics are identical to scalar :meth:`get` (same probe
-        order, same deterministic bloom false positives, same accounting);
-        misses report seq ``-1``.  All fence selection runs through the
+        Thin wrapper over :meth:`apply_batch`; misses *and deleted keys*
+        report seq ``-1``.  All fence selection runs through the
         :class:`LevelIndex` manifest, array-at-a-time.
         """
+        res = self.apply_batch(RequestBatch.gets(keys))
+        return res.seqs, res.reads, res.probed
+
+    def _lookup_batch(self, keys: np.ndarray
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         keys = np.ascontiguousarray(keys, dtype=np.int64)
         n = keys.shape[0]
         seqs = np.full(n, -1, np.int64)
@@ -463,7 +537,8 @@ class LSMTree:
             hit = got >= 0
             if hit.any():
                 hidx = idx[hit]
-                seqs[hidx] = got[hit]
+                log, tomb = seq_decode(got[hit])
+                seqs[hidx] = np.where(tomb, -1, log)
                 active[hidx] = False
         # L0 newest -> oldest: every range-overlapping SST is probed.
         l0 = self.levels[0]
@@ -507,14 +582,20 @@ class LSMTree:
                          idx: np.ndarray, keys: np.ndarray, seqs: np.ndarray,
                          reads: np.ndarray, probed: np.ndarray,
                          active: np.ndarray) -> None:
-        """Probe one SST for the (in-range) ops at positions ``idx``."""
+        """Probe one SST for the (in-range) ops at positions ``idx``.
+
+        A found tombstone resolves the op as not-found (seq stays -1) but
+        still costs the block read — the marker had to be fetched to learn
+        the key is dead.
+        """
         probed[idx] += 1
         k = keys[idx]
         pos = np.searchsorted(sst.keys, k)
         pos = np.minimum(pos, sst.n - 1)
         found = sst.keys[pos] == k
         fidx = idx[found]
-        seqs[fidx] = sst.seqs[pos[found]]
+        log, tomb = seq_decode(sst.seqs[pos[found]])
+        seqs[fidx] = np.where(tomb, -1, log)
         reads[fidx] += 1     # bloom true positive -> one block read
         active[fidx] = False
         midx = idx[~found]
@@ -523,16 +604,167 @@ class LSMTree:
                                        self.cfg.bloom_fpr)
             reads[midx] += fp.astype(np.int32)
 
-    def _probe_sst(self, sst: SST, key: int) -> tuple[int | None, int]:
-        seq = sst.get(key)
-        if seq is not None:
-            return seq, 1  # bloom true positive -> one block read
-        # Deterministic pseudo-random bloom false positive (same hash as the
-        # batched path in level_index.bloom_false_positives).
-        fp = bloom_false_positives(np.asarray([key], np.int64),
-                                   bloom_seed_for_uid(sst.uid),
-                                   self.cfg.bloom_fpr)
-        return None, int(fp[0])
+    # --------------------------------------------------------------- scan
+    def scan_batch(self, start_keys: np.ndarray,
+                   lengths: np.ndarray) -> ResultBatch:
+        """Vectorized forward range scans — thin wrapper over
+        :meth:`apply_batch`.  Scan *i* returns up to ``lengths[i]`` live
+        (non-deleted, latest-wins) keys ``>= start_keys[i]`` in sorted
+        order; payloads land in the result's flattened scan arrays."""
+        return self.apply_batch(RequestBatch.scans(start_keys, lengths))
+
+    def _scan_impl(self, start_keys: np.ndarray, lengths: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                              np.ndarray, np.ndarray]:
+        """Resolve a batch of scans: ``(counts, blocks, files, keys, seqs)``.
+
+        Per level, ONE backend-routed :meth:`LevelIndex.scan_spans` query
+        resolves every pending scan's SST span; each scan then k-way merges
+        its per-source runs through ``merge_backend.merge_runs`` (numpy /
+        jnp / the Pallas merge-path kernel) with latest-wins dedup, drops
+        tombstones, and keeps the first ``lengths[i]`` live keys.
+
+        Runs are gathered with a per-run entry cap ``m`` (starting at the
+        requested length) and the cap doubles until the window is *proven*
+        complete: every returned key must lie at or before the minimum
+        frontier (last delivered key) of any capped run, else a newer
+        version or tombstone beyond some cap could falsify the window.
+
+        Device cost models a merging iterator, not the gather: every
+        device run (each L0 SST, one per deeper level) is *seeked* (one
+        file probe, at least one block), then charged
+        ``ceil(consumed_bytes / block_size)`` blocks for the entries the
+        heap actually consumed — those with key <= the window's last key —
+        opening later SSTs of a level's span only when consumption crosses
+        into them.
+        """
+        cfg = self.cfg
+        kv = cfg.kv_size
+        n = int(start_keys.shape[0])
+        start_keys = np.ascontiguousarray(start_keys, np.int64)
+        want = np.asarray(lengths, np.int64)
+        counts = np.zeros(n, np.int64)
+        blocks = np.zeros(n, np.int32)
+        files = np.zeros(n, np.int32)
+        out_k: list = [np.empty(0, np.int64)] * n
+        out_s: list = [np.empty(0, np.int64)] * n
+        if n == 0:
+            return counts, blocks, files, np.empty(0, np.int64), \
+                np.empty(0, np.int64)
+        pending = np.arange(n)
+        m = np.maximum(want, 1).copy()
+        # Span byte budget: m keys plus one (max-size) partial leading SST.
+        max_sst = cfg.s_M + cfg.s_m + kv
+        while pending.size:
+            spans = {}
+            for level in range(1, cfg.max_levels):
+                if self.index.n_ssts(level):
+                    spans[level] = self.index.scan_spans(
+                        level, start_keys[pending], m[pending] * kv + max_sst)
+            still = []
+            for j, op in enumerate(pending):
+                op = int(op)
+                op_spans = {lvl: (int(s[j]), int(e[j]))
+                            for lvl, (s, e) in spans.items()}
+                done = self._scan_one(op, int(start_keys[op]), int(want[op]),
+                                      int(m[op]), op_spans, counts, blocks,
+                                      files, out_k, out_s)
+                if not done:
+                    still.append(op)
+            pending = np.asarray(still, np.int64)
+            m[pending] *= 2
+        flat_k = np.concatenate(out_k) if n else np.empty(0, np.int64)
+        flat_s = np.concatenate(out_s) if n else np.empty(0, np.int64)
+        return counts, blocks, files, flat_k, flat_s
+
+    def _scan_one(self, op: int, k: int, want: int, m: int,
+                  spans: dict[int, tuple[int, int]], counts, blocks, files,
+                  out_k: list, out_s: list) -> bool:
+        """One gather/merge round for scan ``op`` at run cap ``m``; returns
+        False when the cap must double (window not yet provably complete)."""
+        cfg = self.cfg
+        kv = cfg.kv_size
+        bsz = cfg.block_size
+        runs: list[tuple[np.ndarray, np.ndarray]] = []
+        frontiers: list[int] = []   # last delivered key of each capped run
+        # Device runs for the iterator cost model: (keys, SST part bounds).
+        dev_runs: list[tuple[np.ndarray, np.ndarray]] = []
+        for mt in [self.memtable] + self.immutables:
+            ks, ss, more = mt.scan_from(k, m)
+            if more:
+                frontiers.append(int(ks[-1]))
+            if ks.shape[0]:
+                runs.append((ks, ss))
+        for sst in self.levels[0]:
+            if sst.largest < k:
+                continue
+            ks, ss = sst.scan_from(k, m)
+            if ks.shape[0] == 0:
+                continue
+            if ks.shape[0] == m and sst.largest > int(ks[-1]):
+                frontiers.append(int(ks[-1]))
+            runs.append((ks, ss))
+            dev_runs.append((ks, np.asarray([ks.shape[0]], np.int64)))
+        for level, (start, end) in spans.items():
+            remaining = m
+            parts_k: list[np.ndarray] = []
+            parts_s: list[np.ndarray] = []
+            for pos in range(start, end):
+                if remaining <= 0:
+                    break
+                sst = self.levels[level][pos]
+                if pos == start:
+                    ks, ss = sst.scan_from(k, remaining)
+                else:
+                    ks, ss = sst.keys[:remaining], sst.seqs[:remaining]
+                if ks.shape[0] == 0:
+                    continue
+                parts_k.append(ks)
+                parts_s.append(ss)
+                remaining -= int(ks.shape[0])
+            if parts_k:
+                lk = np.concatenate(parts_k)
+                ls = np.concatenate(parts_s)
+                if (lk.shape[0] == m
+                        and int(self.index.largest[level][-1]) > int(lk[-1])):
+                    frontiers.append(int(lk[-1]))
+                runs.append((lk, ls))
+                bounds = np.cumsum([p.shape[0] for p in parts_k])
+                dev_runs.append((lk, bounds.astype(np.int64)))
+        if not runs:
+            return True          # nothing at or past k anywhere
+        keys, seqs = merge_backend.merge_runs(runs)
+        log, tomb = seq_decode(seqs)
+        live_idx = np.nonzero(~tomb)[0]
+        if frontiers:
+            frontier = min(frontiers)
+            trusted = live_idx[keys[live_idx] <= frontier]
+            if trusted.shape[0] < want:
+                return False     # double m: window not provably complete
+        take = live_idx[:want]
+        last_key = int(keys[take[-1]]) if take.shape[0] else None
+        n_blocks = n_files = 0
+        for rk, bounds in dev_runs:
+            consumed = 0 if last_key is None else \
+                int(np.searchsorted(rk, last_key, side="right"))
+            if consumed == 0:
+                n_files += 1     # seek only: position at the first entry
+                n_blocks += 1
+                continue
+            prev = 0
+            for b in bounds.tolist():
+                part = min(consumed, b) - prev
+                if part <= 0:
+                    break
+                n_files += 1
+                n_blocks += -(-part * kv // bsz)
+                prev = b
+        out_k[op] = keys[take]
+        out_s[op] = log[take]
+        counts[op] = int(take.shape[0])
+        blocks[op] = n_blocks
+        files[op] = n_files
+        return True
 
     # -------------------------------------------------------------- misc
     def level_sizes(self) -> list[int]:
@@ -560,7 +792,12 @@ class LSMTree:
                     "vSST exceeds S_M + S_m tail slack"
 
     def merged_view(self) -> dict[int, int]:
-        """Ground-truth key -> latest seq, for correctness tests."""
+        """Ground-truth *live* key -> latest logical seq, for tests.
+
+        Encoded seqnos are monotone in the logical seq, so latest-wins is
+        max-encoded-wins; keys whose winning entry is a DELETE tombstone
+        are dropped from the user-visible view.
+        """
         view: dict[int, int] = {}
         for level in range(self.cfg.max_levels - 1, 0, -1):
             for sst in self.levels[level]:
@@ -579,4 +816,4 @@ class LSMTree:
                 prev = view.get(k)
                 if prev is None or s > prev:
                     view[k] = s
-        return view
+        return {k: s >> 1 for k, s in view.items() if not (s & 1)}

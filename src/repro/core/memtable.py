@@ -76,6 +76,13 @@ class Memtable:
         self._sorted = (keys[last], seqs[last])
         return self._sorted
 
+    def scan_from(self, key: int, m: int) -> tuple[np.ndarray, np.ndarray, bool]:
+        """First ``m`` entries with key >= ``key`` (sorted, deduped) plus a
+        flag saying whether more remain past the cap."""
+        ks, ss = self.to_sorted()
+        i = int(np.searchsorted(ks, key))
+        return ks[i:i + m], ss[i:i + m], (ks.shape[0] - i) > m
+
     def get_batch(self, keys: np.ndarray) -> np.ndarray:
         """Vectorized :meth:`get` over many keys; -1 marks a miss."""
         out = np.full(keys.shape[0], -1, np.int64)

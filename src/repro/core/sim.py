@@ -5,10 +5,12 @@ a *fixed rate* into an unbounded queue (coordinated-omission-free).  The sim
 reproduces that exactly:
 
 * arrivals are deterministic (rate R) — the open-loop generator;
-* foreground service is a single FIFO queue with constant PUT CPU service
-  and per-GET service derived from the store's *actual* probe work (device
-  block reads × device model, inflated while compactions keep the device
-  busy);
+* foreground service is a single FIFO queue with per-kind costs
+  (:class:`repro.core.types.OpKind`): constant CPU for PUT/DELETE, per-GET
+  service from the store's *actual* probe work (device block reads ×
+  device model), per-SCAN service from the files seeked and blocks spanned
+  (sequential transfer) — read kinds are inflated while compactions keep
+  the device busy;
 * background work (flushes + compaction chains emitted by the eager
   structural LSM in :mod:`repro.core.lsm`) runs on a slot pool
   (``DeviceModel.compaction_slots``); job durations come from real bytes;
@@ -35,10 +37,13 @@ import numpy as np
 
 from .lsm import Job, LSMTree
 from .stats import Stats
-from .types import DeviceModel, LSMConfig
+from .types import DeviceModel, LSMConfig, OpKind, RequestBatch
 
-PUT_SERVICE = 1.5e-6      # CPU service per put (s); ~max 0.7 Mops/s single queue
+PUT_SERVICE = 1.5e-6      # CPU service per put/delete (s); ~0.7 Mops/s queue
 GET_CPU = 2.0e-6          # CPU service per get before device reads
+SCAN_CPU = 4.0e-6         # CPU service per scan before device reads (seek
+                          # setup + iterator merge overhead)
+SCAN_FILE_CPU = 2.0e-6    # per-file iterator CPU (heap entry, index block)
 BUSY_ALPHA = 0.6          # read-service inflation per concurrently-running job
 
 
@@ -46,15 +51,15 @@ BUSY_ALPHA = 0.6          # read-service inflation per concurrently-running job
 class SimResult:
     arrivals: np.ndarray
     latency: np.ndarray            # end-to-end per op (s)
-    op_types: np.ndarray           # 0 = put, 1 = get
+    op_types: np.ndarray           # OpKind values (0 put, 1 get, 2 del, 3 scan)
     stall_total: float = 0.0
     stall_max: float = 0.0
     n_stalls: int = 0
     stats: Stats | None = None
     job_log: list[Job] = field(default_factory=list)
     makespan: float = 0.0
-    get_reads: np.ndarray | None = None    # per-op device block reads (GETs)
-    get_probed: np.ndarray | None = None   # per-op SSTs probed (GETs)
+    get_reads: np.ndarray | None = None    # per-op device block reads
+    get_probed: np.ndarray | None = None   # per-op SSTs probed (GET + SCAN)
 
     def pct(self, q: float, op: int | None = None) -> float:
         lat = self.latency if op is None else self.latency[self.op_types == op]
@@ -73,6 +78,10 @@ class SimResult:
     @property
     def p99_get(self) -> float:
         return self.pct(99, 1)
+
+    @property
+    def p99_scan(self) -> float:
+        return self.pct(99, int(OpKind.SCAN))
 
     @property
     def throughput(self) -> float:
@@ -97,6 +106,8 @@ class SimResult:
             "n_stalls": self.n_stalls,
             "kops_s": round(self.throughput / 1e3, 1),
         }
+        if (self.op_types == OpKind.SCAN).any():
+            out["p99_scan_ms"] = round(self.p99_scan * 1e3, 3)
         if self.stats is not None:
             out.update(self.stats.summary())
         return out
@@ -129,6 +140,11 @@ class Simulator:
                  n_regions: int = 1):
         self.cfg = cfg
         self.device = device or DeviceModel()
+        # Scan block accounting happens in the tree (cfg.block_size) while
+        # scan service pricing happens here (device.block_size): keep the
+        # two granularities from silently diverging.
+        assert cfg.block_size == self.device.block_size, \
+            "LSMConfig.block_size must match DeviceModel.block_size"
         self.n_regions = n_regions
         self.stats = Stats()
         self.trees = [LSMTree(cfg, self.stats) for _ in range(n_regions)]
@@ -192,12 +208,29 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def run(self, op_types: np.ndarray, keys: np.ndarray,
-            arrivals: np.ndarray) -> SimResult:
+            arrivals: np.ndarray,
+            scan_lens: np.ndarray | None = None) -> SimResult:
+        """Drive the store with a typed op stream (OpKind values).
+
+        ``scan_lens[i]`` is the requested key count of a SCAN op (ignored
+        for other kinds; may be omitted for scan-free streams).  Per-kind
+        service: PUT/DELETE constant CPU, GET CPU + block reads × device,
+        SCAN CPU + per-file seek + blocks spanned × sequential read — all
+        read kinds get the same busy-inflation post-pass.
+        """
         n = op_types.shape[0]
         assert keys.shape[0] == n and arrivals.shape[0] == n and n > 0
         cfg = self.cfg
         kpm = cfg.keys_per_memtable
-        service = np.where(op_types == 0, PUT_SERVICE, GET_CPU)
+        op_types = np.ascontiguousarray(op_types, np.uint8)
+        if scan_lens is None:
+            assert not (op_types == OpKind.SCAN).any(), \
+                "SCAN ops require scan_lens"
+            scan_lens = np.zeros(n, np.int32)
+        scan_lens = np.ascontiguousarray(scan_lens, np.int32)
+        service = np.full(n, PUT_SERVICE)
+        service[op_types == OpKind.GET] = GET_CPU
+        service[op_types == OpKind.SCAN] = SCAN_CPU
         get_reads = np.zeros(n, dtype=np.int32)
         get_probed = np.zeros(n, dtype=np.int32)
         block_t = (self.device.io_latency
@@ -205,15 +238,15 @@ class Simulator:
 
         regions = (keys % self.n_regions).astype(np.int64) \
             if self.n_regions > 1 else np.zeros(n, np.int64)
-        put_mask = op_types == 0
-        put_idx = np.nonzero(put_mask)[0]
+        write_mask = (op_types == OpKind.PUT) | (op_types == OpKind.DELETE)
+        write_idx = np.nonzero(write_mask)[0]
 
         # Fill-event schedule: the op index at which each region's memtable
-        # fills = every kpm-th put routed to that region.
+        # fills = every kpm-th write (PUT or DELETE) routed to that region.
         fill_events: list[tuple[int, int]] = []  # (op_idx, region)
         for r in range(self.n_regions):
-            r_puts = put_idx[regions[put_idx] == r]
-            marks = r_puts[kpm - 1::kpm]
+            r_writes = write_idx[regions[write_idx] == r]
+            marks = r_writes[kpm - 1::kpm]
             fill_events.extend((int(m), r) for m in marks)
         fill_events.sort()
 
@@ -223,10 +256,10 @@ class Simulator:
         prev = 0
         for op_i, region in fill_events:
             D = self._advance_clock(D, prev, op_i + 1, op_types, keys,
-                                    regions, get_reads, get_probed, service,
-                                    arrivals, block_t)
+                                    scan_lens, regions, get_reads,
+                                    get_probed, service, arrivals, block_t)
             prev = op_i + 1
-            t = D  # the fill happens when its last put is serviced
+            t = D  # the fill happens when its last write is serviced
             tree = self.trees[region]
             tree.seal_memtable()
             stall = self._wb_stall(region, t)
@@ -240,8 +273,8 @@ class Simulator:
                 service[op_i] += stall
                 D += stall
                 self.stall_events.append((op_i, stall))
-        self._advance_clock(D, prev, n, op_types, keys, regions, get_reads,
-                            get_probed, service, arrivals, block_t)
+        self._advance_clock(D, prev, n, op_types, keys, scan_lens, regions,
+                            get_reads, get_probed, service, arrivals, block_t)
 
         # --- read service refinement: device busy while compactions run ----
         starts = np.sort(np.array([j.t_start for j in self.job_log
@@ -250,9 +283,14 @@ class Simulator:
                                  if j.kind == "compact"], dtype=np.float64))
         busy = (np.searchsorted(starts, arrivals, side="right")
                 - np.searchsorted(ends, arrivals, side="right"))
-        is_get = op_types == 1
+        is_get = op_types == OpKind.GET
         service[is_get] += (get_reads[is_get] * block_t
                             * (BUSY_ALPHA * busy[is_get]))
+        is_scan = op_types == OpKind.SCAN
+        if is_scan.any():
+            seq_block_t = self.device.block_size / self.device.read_bw
+            service[is_scan] += (get_reads[is_scan] * seq_block_t
+                                 * (BUSY_ALPHA * busy[is_scan]))
 
         # --- exact Lindley over the single FIFO queue ----------------------
         S = np.cumsum(service)
@@ -274,15 +312,17 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def _advance_clock(self, D: float, lo: int, hi: int, op_types, keys,
-                       regions, get_reads, get_probed, service, arrivals,
-                       block_t: float) -> float:
+                       scan_lens, regions, get_reads, get_probed, service,
+                       arrivals, block_t: float) -> float:
         """Apply ops [lo, hi) structurally and advance the processed clock.
 
         Returns the departure time of op hi-1 (before any stall injection).
-        GETs run as ONE vectorized ``LSMTree.get_batch`` per region per
-        window (tree state is constant for the window's reads: its puts are
-        applied first, and lookups don't mutate).  GET service includes the
-        base device-read cost here; the busy-inflation term is refined in a
+        Each region's window slice becomes ONE typed ``RequestBatch``
+        through ``LSMTree.apply_batch`` (writes land first, then the
+        window's GETs/SCANs observe constant tree state — regions are
+        independent, so per-region application equals global
+        writes-then-reads order).  Read service includes the base
+        device-read cost here; the busy-inflation term is refined in a
         vectorized post-pass.
         """
         if hi <= lo:
@@ -290,25 +330,57 @@ class Simulator:
         sl = slice(lo, hi)
         w_types = op_types[sl]
         w_keys = keys[sl]
+        w_lens = scan_lens[sl]
         w_regions = regions[sl]
+        scan_delivered = np.zeros(w_types.shape[0], np.int64)
+        has_reads = bool(((w_types == OpKind.GET)
+                          | (w_types == OpKind.SCAN)).any())
         for r in range(self.n_regions):
-            mask = (w_types == 0) & (w_regions == r)
-            if mask.any():
-                self.trees[r].put_batch(w_keys[mask])
-        g_mask = w_types == 1
-        if g_mask.any():
-            for r in range(self.n_regions):
-                rm = g_mask & (w_regions == r) if self.n_regions > 1 else g_mask
-                if not rm.any():
-                    continue
-                ri = np.nonzero(rm)[0]
-                _seqs, b_reads, b_probed = self.trees[r].get_batch(w_keys[ri])
-                get_reads[lo + ri] = b_reads
-                get_probed[lo + ri] = b_probed
-                self.stats.device_reads += int(b_reads.sum())
-                self.stats.ops += int(ri.shape[0])
-            g_idx = np.nonzero(g_mask)[0]
-            service[sl][g_idx] += get_reads[sl][g_idx] * block_t
+            rm = w_regions == r if self.n_regions > 1 \
+                else np.ones(w_types.shape[0], bool)
+            if not rm.any():
+                continue
+            ri = np.nonzero(rm)[0]
+            if not has_reads:
+                # Write-only window (the fillrandom hot path): skip the
+                # batch machinery, same array-order semantics.
+                self.trees[r]._write_batch(w_keys[ri],
+                                           w_types[ri] == OpKind.DELETE)
+                continue
+            res = self.trees[r].apply_batch(
+                RequestBatch(w_types[ri], w_keys[ri], w_lens[ri]))
+            is_get = res.kinds == OpKind.GET
+            is_scan = res.kinds == OpKind.SCAN
+            if is_get.any() or is_scan.any():
+                rd = np.nonzero(is_get | is_scan)[0]
+                get_reads[lo + ri[rd]] = res.reads[rd]
+                get_probed[lo + ri[rd]] = res.probed[rd]
+            if is_get.any():
+                self.stats.device_reads += int(res.reads[is_get].sum())
+                self.stats.ops += int(is_get.sum())
+            if is_scan.any():
+                sc = np.nonzero(is_scan)[0]
+                scan_delivered[ri[sc]] = res.seqs[sc]
+                self.stats.scan_blocks += int(res.reads[is_scan].sum())
+                self.stats.scan_ops += int(is_scan.sum())
+                self.stats.ops += int(is_scan.sum())
+        g_idx = np.nonzero(w_types == OpKind.GET)[0] + lo
+        service[g_idx] += get_reads[g_idx] * block_t
+        w_sc = np.nonzero(w_types == OpKind.SCAN)[0]
+        if w_sc.shape[0]:
+            s_idx = w_sc + lo
+            # Modern-iterator latency model: the per-level/per-L0-file
+            # seeks are issued CONCURRENTLY (RocksDB async_io-style, NVMe
+            # queue depth), so a scan pays ONE seek wave of io_latency,
+            # then streams its delivered bytes at sequential bandwidth,
+            # plus a small per-file iterator CPU term.  The per-file block
+            # traffic (get_reads) still hits the device — it feeds busy
+            # inflation and Stats.scan_blocks — but it is not serialized
+            # into foreground latency.
+            delivered = scan_delivered[w_sc] * float(self.cfg.kv_size)
+            service[s_idx] += (self.device.io_latency
+                               + delivered / self.device.read_bw
+                               + get_probed[s_idx] * SCAN_FILE_CPU)
         # incremental Lindley: D_j = S_j + max(D_prev, max_k(a_k - S_{k-1}))
         s = service[sl].astype(np.float64)
         s_cum = np.cumsum(s)

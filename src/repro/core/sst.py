@@ -58,6 +58,11 @@ class SST:
     def may_contain(self, key: int) -> bool:
         return self.smallest <= key <= self.largest
 
+    def scan_from(self, key: int, m: int) -> tuple[np.ndarray, np.ndarray]:
+        """Up to ``m`` (keys, seqs) entries with key >= ``key``."""
+        i = int(np.searchsorted(self.keys, key))
+        return self.keys[i:i + m], self.seqs[i:i + m]
+
     def check_invariants(self) -> None:
         assert self.n > 0, "empty SST"
         d = np.diff(self.keys)

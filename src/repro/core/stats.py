@@ -42,12 +42,18 @@ class Stats:
     compact_bytes_read: int = 0
     compact_bytes_written: int = 0
     device_reads: int = 0            # point-lookup block reads
+    scan_blocks: int = 0             # range-scan device block reads
     # work counters (CPU proxy)
     merged_keys: int = 0
     overlap_probes: int = 0
     ssts_created: int = 0
     manifest_flushes: int = 0
     ops: int = 0
+    # typed-op surface (DELETE tombstones, SCAN traffic)
+    delete_ops: int = 0              # tombstones written (user DELETEs)
+    scan_ops: int = 0
+    tombstones_dropped: int = 0      # markers reclaimed at the bottom level
+    tombstone_bytes_dropped: int = 0
     # structural records
     chains: list[ChainRecord] = field(default_factory=list)
     vssts_good: int = 0
@@ -85,6 +91,12 @@ class Stats:
         return cyc / self.ops
 
     @property
+    def tombstones_live(self) -> int:
+        """DELETE markers still occupying device space (space amplification
+        pressure: written but not yet reclaimed at the bottom level)."""
+        return max(0, self.delete_ops - self.tombstones_dropped)
+
+    @property
     def mean_chain_width(self) -> float:
         if not self.chains:
             return 0.0
@@ -105,7 +117,7 @@ class Stats:
         self.level_bytes_moved[level] = self.level_bytes_moved.get(level, 0) + bytes_moved
 
     def summary(self) -> dict:
-        return {
+        out = {
             "io_amp": round(self.io_amp, 2),
             "write_amp": round(self.write_amp, 2),
             "chains": len(self.chains),
@@ -116,3 +128,12 @@ class Stats:
             "vssts_good": self.vssts_good,
             "vssts_poor": self.vssts_poor,
         }
+        if self.delete_ops or self.scan_ops:
+            out.update({
+                "delete_ops": self.delete_ops,
+                "scan_ops": self.scan_ops,
+                "scan_blocks": self.scan_blocks,
+                "tombstones_dropped": self.tombstones_dropped,
+                "tombstones_live": self.tombstones_live,
+            })
+        return out

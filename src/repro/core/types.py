@@ -1,19 +1,161 @@
-"""Configuration dataclasses for the vLSM core.
+"""Core types of the vLSM store: the typed operation API and configuration.
 
-All sizes are in *bytes*. The paper's defaults (RocksDB-style) are encoded in
-:func:`LSMConfig.rocksdb_default`; the vLSM configuration of §4/§5 in
-:func:`LSMConfig.vlsm_default`.  Benchmarks scale the absolute sizes down
-(the container is laptop-scale) while preserving every ratio the paper's
-analysis depends on: ``memtable == S_M``, ``L1 = f * S_M`` (vLSM) or
-``L1 = L0`` (RocksDB), growth factor ``f`` across levels, and the larger
-``phi`` between L1 and L2 for vLSM.
+Two groups live here:
+
+* **The operation surface** — :class:`OpKind` (PUT/GET/DELETE/SCAN), the
+  columnar :class:`RequestBatch` (kinds / keys / scan_lens / seqnos as flat
+  numpy arrays) and :class:`ResultBatch`.  ``LSMTree.apply_batch`` is the
+  single entry point; every harness (Simulator, YCSB, db_bench) routes
+  through one batch type instead of four parallel array conventions.
+
+* **Configuration dataclasses** — all sizes in *bytes*.  The paper's
+  defaults (RocksDB-style) are encoded in :func:`LSMConfig.rocksdb_default`;
+  the vLSM configuration of §4/§5 in :func:`LSMConfig.vlsm_default`.
+  Benchmarks scale the absolute sizes down (the container is laptop-scale)
+  while preserving every ratio the paper's analysis depends on:
+  ``memtable == S_M``, ``L1 = f * S_M`` (vLSM) or ``L1 = L0`` (RocksDB),
+  growth factor ``f`` across levels, and the larger ``phi`` between L1 and
+  L2 for vLSM.
+
+Tombstone encoding
+------------------
+
+DELETE writes a *tombstone*: a normal (key, seq) entry whose seqno carries a
+tag bit — ``enc = (seq << 1) | is_tombstone``.  Because logical seqnos are
+globally unique and increasing, the encoding is monotone in ``seq``
+regardless of the tag, so every latest-wins merge path (numpy / jnp / the
+Pallas merge-path kernel) works on encoded seqnos unchanged.  Markers flow
+memtable → SST → compactions and are dropped only when a merge writes the
+bottom level; :func:`seq_decode` strips the tag at every user-visible
+boundary (GET/SCAN results, ``merged_view``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class OpKind(enum.IntEnum):
+    """Typed KV operations.  PUT/GET keep the legacy 0/1 wire values."""
+
+    PUT = 0
+    GET = 1
+    DELETE = 2
+    SCAN = 3
+
+
+def seq_encode(seqs: np.ndarray, tombstone) -> np.ndarray:
+    """Tag logical seqnos with the tombstone bit (monotone in ``seqs``)."""
+    return (np.asarray(seqs, np.int64) << 1) | np.asarray(tombstone, np.int64)
+
+
+def seq_decode(enc: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Split encoded seqnos into ``(logical_seq, is_tombstone)``."""
+    enc = np.asarray(enc, np.int64)
+    return enc >> 1, (enc & 1).astype(bool)
+
+
+@dataclass
+class RequestBatch:
+    """A columnar batch of typed KV operations (the store's request ABI).
+
+    ``kinds[i]`` is an :class:`OpKind` value; ``keys[i]`` is the op's key
+    (a SCAN's *start* key); ``scan_lens[i]`` is the number of live keys a
+    SCAN returns (0 for other kinds); ``seqnos[i]`` is the logical seqno
+    the engine assigned to a PUT/DELETE (-1 until applied).
+    """
+
+    kinds: np.ndarray                       # uint8, OpKind values
+    keys: np.ndarray                        # int64
+    scan_lens: np.ndarray | None = None     # int32; lazily zeros
+    seqnos: np.ndarray | None = None        # int64; lazily -1
+
+    def __post_init__(self) -> None:
+        self.kinds = np.ascontiguousarray(self.kinds, np.uint8)
+        self.keys = np.ascontiguousarray(self.keys, np.int64)
+        n = self.kinds.shape[0]
+        assert self.keys.shape[0] == n, "kinds/keys length mismatch"
+        if self.scan_lens is None:
+            self.scan_lens = np.zeros(n, np.int32)
+        else:
+            self.scan_lens = np.ascontiguousarray(self.scan_lens, np.int32)
+            assert self.scan_lens.shape[0] == n
+        if self.seqnos is None:
+            self.seqnos = np.full(n, -1, np.int64)
+        else:
+            self.seqnos = np.ascontiguousarray(self.seqnos, np.int64)
+            assert self.seqnos.shape[0] == n
+        scans = self.kinds == OpKind.SCAN
+        assert (self.scan_lens[scans] > 0).all(), "SCAN needs scan_lens > 0"
+
+    def __len__(self) -> int:
+        return int(self.kinds.shape[0])
+
+    def mask(self, *kinds: OpKind) -> np.ndarray:
+        m = np.zeros(len(self), bool)
+        for k in kinds:
+            m |= self.kinds == k
+        return m
+
+    # --- constructors -----------------------------------------------------
+    @staticmethod
+    def puts(keys: np.ndarray) -> "RequestBatch":
+        keys = np.asarray(keys, np.int64)
+        return RequestBatch(np.full(keys.shape[0], OpKind.PUT, np.uint8), keys)
+
+    @staticmethod
+    def gets(keys: np.ndarray) -> "RequestBatch":
+        keys = np.asarray(keys, np.int64)
+        return RequestBatch(np.full(keys.shape[0], OpKind.GET, np.uint8), keys)
+
+    @staticmethod
+    def deletes(keys: np.ndarray) -> "RequestBatch":
+        keys = np.asarray(keys, np.int64)
+        return RequestBatch(np.full(keys.shape[0], OpKind.DELETE, np.uint8),
+                            keys)
+
+    @staticmethod
+    def scans(start_keys: np.ndarray, lengths: np.ndarray) -> "RequestBatch":
+        start_keys = np.asarray(start_keys, np.int64)
+        return RequestBatch(
+            np.full(start_keys.shape[0], OpKind.SCAN, np.uint8),
+            start_keys, scan_lens=np.asarray(lengths, np.int32))
+
+
+@dataclass
+class ResultBatch:
+    """Aligned, columnar results for one :class:`RequestBatch`.
+
+    ``seqs[i]``: PUT/DELETE → the assigned logical seqno; GET → the found
+    logical seqno or -1 (missing *or deleted*); SCAN → number of live keys
+    returned.  ``reads``/``probed`` are device block reads and SSTs touched
+    (nonzero only for read kinds).  SCAN payloads are flattened into
+    ``scan_keys``/``scan_seqs``; op *i* owns the half-open slice
+    ``scan_offsets[i]:scan_offsets[i+1]`` (zero-width for non-scans).
+    """
+
+    kinds: np.ndarray
+    seqs: np.ndarray
+    reads: np.ndarray
+    probed: np.ndarray
+    scan_offsets: np.ndarray = field(
+        default_factory=lambda: np.zeros(1, np.int64))
+    scan_keys: np.ndarray = field(
+        default_factory=lambda: np.empty(0, np.int64))
+    scan_seqs: np.ndarray = field(
+        default_factory=lambda: np.empty(0, np.int64))
+
+    def __len__(self) -> int:
+        return int(self.kinds.shape[0])
+
+    def scan_slice(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        """(keys, logical seqs) returned by op ``i`` (empty for non-scans)."""
+        a, b = int(self.scan_offsets[i]), int(self.scan_offsets[i + 1])
+        return self.scan_keys[a:b], self.scan_seqs[a:b]
 
 
 class Policy(str, enum.Enum):
@@ -83,6 +225,8 @@ class LSMConfig:
     vsst_min_frac: float | None = None  # S_m = S_M * frac; default 1/f
     # --- lookup model -----------------------------------------------------
     bloom_fpr: float = 0.01             # bloom-filter false-positive rate
+    block_size: int = 4096              # device read granularity for scans
+                                        # (mirrors DeviceModel.block_size)
     # LevelIndex rank backend: None follows repro.core.level_index's module
     # switch (numpy by default); "jnp" / "pallas" pin this store's manifest
     # queries to the array backends (parity-tested drop-ins).

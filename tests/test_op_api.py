@@ -1,0 +1,396 @@
+"""Typed operation API (OpKind / RequestBatch / apply_batch) tests:
+
+* SCAN correctness: ``scan_batch`` == a sorted slice of ``merged_view()``
+  on stores grown through real flush/compaction histories;
+* DELETE correctness: tombstoned keys read as not-found across memtable,
+  flush, and compaction boundaries, and markers are reclaimed at the
+  bottom level;
+* ``apply_batch`` == the composed thin wrappers for mixed batches;
+* scan/delete parity across the numpy / jnp / pallas LevelIndex backends;
+* the exact-inverse-CDF ``pareto_keys`` regression (rank popularity must
+  not depend on the sample size).
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    from _propshim import HealthCheck, given, settings, st
+
+from repro.bench_kv.workloads import make_run_e, pareto_keys
+from repro.core import (DeviceModel, LSMConfig, LSMTree, OpKind, RequestBatch,
+                        Simulator)
+from repro.core import level_index
+
+CFG = LSMConfig.vlsm_default(scale=1 << 16)
+
+POLICY_CFGS = (CFG,
+               LSMConfig.rocksdb_default(scale=1 << 16),
+               LSMConfig.adoc_default(scale=1 << 16),
+               LSMConfig.rocksdb_io_default(scale=1 << 16),
+               LSMConfig.lsmi_default(scale=1 << 16))
+
+
+def _grow_tree(seed, n_ops=4000, cfg=CFG, delete_frac=0.15):
+    """A store grown through the DES with interleaved PUTs and DELETEs, so
+    tombstones cross flush and compaction boundaries."""
+    rng = np.random.default_rng(seed)
+    sim = Simulator(cfg, DeviceModel.scaled(1 / 1024))
+    kinds = np.where(rng.random(n_ops) < delete_frac,
+                     np.uint8(OpKind.DELETE), np.uint8(OpKind.PUT))
+    keys = rng.integers(0, 900, size=n_ops).astype(np.int64)
+    sim.run(kinds, keys, np.arange(n_ops, dtype=np.float64) / 1e4)
+    return sim.trees[0], kinds, keys
+
+
+# ----------------------------------------------------------------- scans
+@given(st.integers(0, 2**32))
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_scan_batch_equals_merged_view_slice(seed):
+    """Property: every scan returns exactly the sorted slice of the live
+    merged view starting at its key, truncated to its length."""
+    tree, _k, _ks = _grow_tree(seed)
+    view = tree.merged_view()
+    live_sorted = sorted(view)
+    rng = np.random.default_rng(seed + 1)
+    starts = np.concatenate([
+        rng.integers(0, 900, size=24),        # in-range
+        rng.integers(10**6, 10**9, size=4),   # past everything
+        np.asarray([-5], np.int64),           # before everything
+    ]).astype(np.int64)
+    lens = rng.integers(1, 60, size=starts.shape[0]).astype(np.int32)
+    res = tree.scan_batch(starts, lens)
+    for i, (k, ln) in enumerate(zip(starts.tolist(), lens.tolist())):
+        want = [x for x in live_sorted if x >= k][:ln]
+        got_k, got_s = res.scan_slice(i)
+        assert got_k.tolist() == want
+        assert got_s.tolist() == [view[x] for x in want]
+        assert int(res.seqs[i]) == len(want)
+
+
+def test_scan_cost_accounting_sane():
+    tree, _k, _ks = _grow_tree(3, n_ops=5000)
+    res = tree.scan_batch(np.asarray([0], np.int64),
+                          np.asarray([80], np.int32))
+    assert int(res.seqs[0]) > 0
+    assert int(res.probed[0]) >= 1          # at least one file seeked
+    assert int(res.reads[0]) >= int(res.probed[0])  # >= one block per file
+    # a scan past the keyspace touches nothing
+    res = tree.scan_batch(np.asarray([10**15], np.int64),
+                          np.asarray([10], np.int32))
+    assert int(res.seqs[0]) == 0
+    assert int(res.reads[0]) == 0 and int(res.probed[0]) == 0
+
+
+# --------------------------------------------------------------- deletes
+@given(st.integers(0, 2**32))
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_delete_then_get_not_found_across_boundaries(seed):
+    """Property: after the full flush/compaction history, a GET agrees
+    with the stream's last write per key — not-found iff it was a DELETE —
+    for every policy's boundary behaviour."""
+    tree, kinds, keys = _grow_tree(seed, n_ops=3000)
+    last = {}
+    for kind, key in zip(kinds.tolist(), keys.tolist()):
+        last[key] = kind
+    sample = np.asarray(list(last)[:300], np.int64)
+    seqs, _r, _p = tree.get_batch(sample)
+    for i, key in enumerate(sample.tolist()):
+        if last[key] == OpKind.DELETE:
+            assert int(seqs[i]) == -1, f"deleted key {key} resurfaced"
+        else:
+            assert int(seqs[i]) >= 0, f"live key {key} lost"
+
+
+def test_delete_visible_through_memtable_flush_and_compaction():
+    """DELETE-then-GET stays not-found when the tombstone sits in the
+    memtable, then in an L0 SST, then below a compacted level."""
+    cfg = CFG
+    tree = LSMTree(cfg)
+    room = tree.memtable.room
+    keys = np.arange(room, dtype=np.int64)
+    tree.put_batch(keys)
+    tree.seal_memtable()
+    tree.flush_immutable()
+    # tombstone in the memtable
+    tree.delete_batch(np.asarray([3], np.int64))
+    assert tree.get(3)[0] is None
+    # tombstone flushed to L0
+    tree.seal_memtable()
+    tree.flush_immutable()
+    assert tree.get(3)[0] is None
+    assert 3 not in tree.merged_view()
+    # push more data through so compactions run; the key stays dead
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        tree.put_batch(rng.integers(4, room, size=tree.memtable.room)
+                       .astype(np.int64))
+        tree.seal_memtable()
+        tree.flush_immutable()
+    tree.check_invariants()
+    assert tree.get(3)[0] is None
+    assert 3 not in tree.merged_view()
+
+
+def test_tombstones_dropped_at_bottom_level():
+    """Markers are reclaimed when a merge writes the bottom level and the
+    Stats counters record the reclamation."""
+    cfg = CFG.with_(max_levels=3)   # L0, L1, bottom L2
+    tree = LSMTree(cfg)
+    rng = np.random.default_rng(1)
+    for i in range(24):
+        n = tree.memtable.room
+        keys = rng.integers(0, 400, size=n).astype(np.int64)
+        if i % 2:
+            tree.delete_batch(keys[: n // 2])
+            tree.put_batch(keys[n // 2:])
+        else:
+            tree.put_batch(keys)
+        tree.seal_memtable()
+        tree.flush_immutable()
+        tree.background_triggers()   # push L1 -> bottom
+    assert tree.stats.delete_ops > 0
+    assert tree.stats.tombstones_dropped > 0
+    assert tree.stats.tombstone_bytes_dropped == \
+        tree.stats.tombstones_dropped * cfg.kv_size
+    # nothing at the bottom level carries a tombstone bit
+    for sst in tree.levels[cfg.max_levels - 1]:
+        assert not (np.asarray(sst.seqs) & 1).any()
+
+
+# ----------------------------------------------------------- apply_batch
+@given(st.integers(0, 2**32))
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_apply_batch_equals_composed_wrappers(seed):
+    """Property: one mixed apply_batch == put_batch + delete_batch (stream
+    order) then get_batch + scan_batch on two identically-grown stores."""
+    import itertools
+
+    import repro.core.lsm as lsm_mod
+    import repro.core.sst as sst_mod
+    rng = np.random.default_rng(seed)
+    trees = []
+    for _ in range(2):
+        # identical uid sequences -> identical bloom false positives
+        sst_mod._ids = itertools.count()
+        lsm_mod._job_ids = itertools.count()
+        tree, _k, _ks = _grow_tree(seed, n_ops=2500)
+        if tree.memtable.n:               # start on an empty memtable
+            tree.seal_memtable()
+            tree.flush_immutable()
+        trees.append(tree)
+    tree_a, tree_b = trees
+
+    # fixed composition (writes must fit the memtable), random order
+    kinds = np.asarray([OpKind.PUT] * 18 + [OpKind.DELETE] * 12
+                       + [OpKind.GET] * 25 + [OpKind.SCAN] * 25, np.uint8)
+    rng.shuffle(kinds)
+    n = kinds.shape[0]
+    keys = rng.integers(0, 900, size=n).astype(np.int64)
+    lens = np.where(kinds == OpKind.SCAN,
+                    rng.integers(1, 40, size=n), 0).astype(np.int32)
+    assert 30 <= tree_a.memtable.room
+
+    res = tree_a.apply_batch(RequestBatch(kinds, keys, lens))
+
+    # composed wrappers on tree_b: writes first (stream order, chunked at
+    # each PUT/DELETE alternation), then reads
+    w = (kinds == OpKind.PUT) | (kinds == OpKind.DELETE)
+    widx = np.nonzero(w)[0]
+    exp_seqs = np.full(n, -1, np.int64)
+    seg_start = 0
+    for j in range(1, widx.size + 1):
+        if j == widx.size or kinds[widx[j]] != kinds[widx[seg_start]]:
+            seg = widx[seg_start:j]
+            fn = (tree_b.delete_batch
+                  if kinds[seg[0]] == OpKind.DELETE else tree_b.put_batch)
+            exp_seqs[seg] = fn(keys[seg])
+            seg_start = j
+    gidx = np.nonzero(kinds == OpKind.GET)[0]
+    if gidx.size:
+        s, r, p = tree_b.get_batch(keys[gidx])
+        assert np.array_equal(res.seqs[gidx], s)
+        assert np.array_equal(res.reads[gidx], r)
+        assert np.array_equal(res.probed[gidx], p)
+    sidx = np.nonzero(kinds == OpKind.SCAN)[0]
+    if sidx.size:
+        sres = tree_b.scan_batch(keys[sidx], lens[sidx])
+        assert np.array_equal(res.seqs[sidx], sres.seqs)
+        assert np.array_equal(res.reads[sidx], sres.reads)
+        assert np.array_equal(res.probed[sidx], sres.probed)
+        for j, i in enumerate(sidx.tolist()):
+            ak, a_s = res.scan_slice(i)
+            bk, b_s = sres.scan_slice(j)
+            assert np.array_equal(ak, bk) and np.array_equal(a_s, b_s)
+    if widx.size:
+        assert np.array_equal(res.seqs[widx], exp_seqs[widx])
+    # both trees end in identical user-visible state
+    assert tree_a.merged_view() == tree_b.merged_view()
+
+
+def test_wrappers_are_thin():
+    """put/delete/get/scan wrappers return exactly what apply_batch does."""
+    tree = LSMTree(CFG)
+    keys = np.arange(20, dtype=np.int64)
+    seqs = tree.put_batch(keys)
+    assert seqs.tolist() == list(range(20))
+    dseqs = tree.delete_batch(np.asarray([5, 6], np.int64))
+    assert dseqs.tolist() == [20, 21]
+    s, r, p = tree.get_batch(np.asarray([5, 7], np.int64))
+    assert s.tolist() == [-1, 7]
+    res = tree.scan_batch(np.asarray([4], np.int64),
+                          np.asarray([3], np.int32))
+    assert res.scan_slice(0)[0].tolist() == [4, 7, 8]  # 5, 6 deleted
+
+
+def test_scalar_get_delegates_to_batch():
+    tree, _k, _ks = _grow_tree(9, n_ops=2000)
+    rng = np.random.default_rng(10)
+    queries = np.concatenate([rng.integers(0, 900, size=100),
+                              rng.integers(10**6, 10**9, size=30)]
+                             ).astype(np.int64)
+    b_seqs, b_reads, b_probed = tree.get_batch(queries)
+    for i, k in enumerate(queries.tolist()):
+        seq, reads, probed = tree.get(k)
+        assert (seq if seq is not None else -1) == int(b_seqs[i])
+        assert reads == int(b_reads[i])
+        assert probed == int(b_probed[i])
+
+
+# --------------------------------------------------------- backend parity
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_scan_delete_parity_across_index_backends(backend):
+    """The jnp / pallas LevelIndex rank backends are drop-ins for the new
+    scan + delete read paths (acceptance criterion)."""
+    tree, _k, _ks = _grow_tree(21, n_ops=3000)
+    rng = np.random.default_rng(22)
+    starts = rng.integers(0, 900, size=40).astype(np.int64)
+    lens = rng.integers(1, 50, size=40).astype(np.int32)
+    gets = rng.integers(0, 900, size=100).astype(np.int64)
+    ref_scan = tree.scan_batch(starts, lens)
+    ref_get = tree.get_batch(gets)
+    level_index.set_backend(backend)
+    try:
+        got_scan = tree.scan_batch(starts, lens)
+        got_get = tree.get_batch(gets)
+    finally:
+        level_index.set_backend("numpy")
+    for a, b in zip(ref_get, got_get):
+        assert np.array_equal(a, b), f"{backend} GET path differs"
+    for field in ("seqs", "reads", "probed", "scan_offsets", "scan_keys",
+                  "scan_seqs"):
+        assert np.array_equal(getattr(ref_scan, field),
+                              getattr(got_scan, field)), \
+            f"{backend} SCAN {field} differs"
+
+
+@pytest.mark.parametrize("cfg", POLICY_CFGS,
+                         ids=lambda c: c.policy.value)
+def test_delete_scan_all_policies(cfg):
+    """The typed surface holds up under every compaction policy."""
+    tree, kinds, keys = _grow_tree(33, n_ops=2500, cfg=cfg)
+    tree.check_invariants()
+    view = tree.merged_view()
+    live_sorted = sorted(view)
+    res = tree.scan_batch(np.asarray([0], np.int64),
+                          np.asarray([100], np.int32))
+    assert res.scan_slice(0)[0].tolist() == live_sorted[:100]
+    last = {}
+    for kind, key in zip(kinds.tolist(), keys.tolist()):
+        last[key] = kind
+    deleted = [k for k, v in last.items() if v == OpKind.DELETE][:50]
+    s, _r, _p = tree.get_batch(np.asarray(deleted, np.int64))
+    assert (s == -1).all()
+
+
+# -------------------------------------------------------------- simulator
+def test_sim_run_e_end_to_end():
+    """YCSB-E drives the DES: scans get service, P99 is measurable, and
+    scan accounting lands in Stats."""
+    rng = np.random.default_rng(5)
+    pop = np.unique(rng.integers(0, 2**40, 20_000).astype(np.int64))
+    spec = make_run_e(pop, 10_000, dist="zipfian")
+    cfg = LSMConfig.vlsm_default(scale=1 << 17)
+    sim = Simulator(cfg, DeviceModel.scaled((1 << 17) / (64 << 20)))
+    op_types = np.concatenate([np.zeros(pop.shape[0], np.uint8),
+                               spec.op_types])
+    keys = np.concatenate([pop, spec.keys])
+    lens = np.concatenate([np.zeros(pop.shape[0], np.int32),
+                           spec.scan_lens])
+    res = sim.run(op_types, keys,
+                  np.arange(op_types.shape[0], dtype=np.float64) / 2e3,
+                  scan_lens=lens)
+    sc = res.op_types == OpKind.SCAN
+    assert sc.sum() > 0
+    assert res.p99_scan > 0.0
+    assert "p99_scan_ms" in res.summary()
+    assert sim.stats.scan_ops == int(sc.sum())
+    assert sim.stats.scan_blocks > 0
+    assert res.get_probed[sc].max() >= 1
+
+
+def test_sim_deletes_through_des():
+    """DELETE ops flow through the DES write path: they fill memtables,
+    flush, and count as writes."""
+    cfg = LSMConfig.vlsm_default(scale=1 << 16)
+    sim = Simulator(cfg, DeviceModel.scaled(1 / 1024))
+    rng = np.random.default_rng(6)
+    n = 4000
+    kinds = np.where(rng.random(n) < 0.3, np.uint8(OpKind.DELETE),
+                     np.uint8(OpKind.PUT))
+    keys = rng.integers(0, 600, size=n).astype(np.int64)
+    res = sim.run(kinds, keys, np.arange(n, dtype=np.float64) / 1e4)
+    assert sim.stats.delete_ops == int((kinds == OpKind.DELETE).sum())
+    assert sim.stats.ops == n
+    assert res.latency.shape[0] == n
+    tree = sim.trees[0]
+    tree.check_invariants()
+
+
+# ------------------------------------------------------------ pareto fix
+def test_pareto_keys_rank_popularity_independent_of_n():
+    """Regression (seeded): the first draws are identical regardless of
+    how many samples are requested — rank popularity is a fixed function
+    of (rank, alpha, m), not of the sample size."""
+    pop = np.sort(np.unique(
+        np.random.default_rng(0).integers(0, 2**40, 5000))).astype(np.int64)
+    short = pareto_keys(pop, 500, seed=13)
+    long = pareto_keys(pop, 5000, seed=13)
+    assert np.array_equal(short, long[:500])
+
+
+def test_pareto_keys_pinned_values():
+    """Seeded golden values for the exact inverse-CDF mapping."""
+    pop = np.arange(100, dtype=np.int64)
+    got = pareto_keys(pop, 8, alpha=1.16, seed=13)
+    assert got.tolist() == [73, 73, 91, 22, 22, 66, 62, 22]
+
+
+def test_pareto_keys_skewed_toward_head():
+    """The head ranks carry most of the mass (Meta-like skew)."""
+    pop = np.arange(10_000, dtype=np.int64)
+    keys = pareto_keys(pop, 50_000, seed=13)
+    perm = np.random.default_rng(14).permutation(10_000)
+    ranks = np.empty(10_000, np.int64)
+    ranks[perm] = np.arange(10_000)
+    key_rank = ranks[keys]
+    assert (key_rank < 100).mean() > 0.5   # top-1% ranks get >50% of hits
+
+
+def test_run_e_shape():
+    pop = np.arange(1000, dtype=np.int64) * 7
+    spec = make_run_e(pop, 5000, dist="uniform")
+    scans = spec.op_types == OpKind.SCAN
+    frac = scans.mean()
+    assert 0.93 < frac < 0.97
+    assert (spec.scan_lens[scans] >= 1).all()
+    assert (spec.scan_lens[scans] <= 100).all()
+    assert (spec.scan_lens[~scans] == 0).all()
+    # inserts are fresh keys, scan starts come from the population
+    assert np.isin(spec.keys[scans], pop).all()
