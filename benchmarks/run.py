@@ -20,6 +20,10 @@ def main() -> None:
                     help="larger op counts (slower, smoother tails)")
     ap.add_argument("--json", default=None,
                     help="also persist every emitted row as JSON here")
+    ap.add_argument("--policy", default="all",
+                    help="compaction policy name(s) for the db_bench "
+                         "section, comma-separated, or 'all' — resolved "
+                         "from the repro.core.policies registry")
     args = ap.parse_args()
 
     from . import fig_benchmarks as fb
@@ -37,14 +41,16 @@ def main() -> None:
         else:
             fn()
         print(f"# {name} done in {time.time()-t1:.1f}s", flush=True)
-    # db_bench (paper §5: amplification-only, Meta-style population)
+    # db_bench (paper §5: amplification-only, Meta-style population).
+    # Policies resolve from the registry: --policy vlsm,lazy or 'all'.
     try:
         from repro.bench_kv.db_bench import fillrandom
-        from repro.core import LSMConfig
+        from repro.core.policies import get_policy, resolve_names
         from .common import SCALE, emit
+        chosen = resolve_names(args.policy)
         for dist in ("uniform", "pareto"):
-            for nm, cfg in (("vlsm", LSMConfig.vlsm_default(scale=SCALE)),
-                            ("rocksdb", LSMConfig.rocksdb_default(scale=SCALE))):
+            for nm in chosen:
+                cfg = get_policy(nm).default_config(scale=SCALE)
                 row = fillrandom(cfg, 60_000, dist=dist, scale=SCALE)
                 emit(f"db_bench.{dist}.io_amp.{nm}", row["io_amp"],
                      f"levels={row['levels_filled']}")

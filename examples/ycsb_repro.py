@@ -14,7 +14,7 @@ from repro.bench_kv import (make_run_a, make_run_b, make_run_c, make_run_d,
                             make_run_e, run_ycsb, sustainable_throughput,
                             make_load_a)
 from repro.bench_kv.workloads import load_keys
-from repro.core import LSMConfig, OpKind
+from repro.core import OpKind, get_policy
 
 SCALE = 1 << 18
 N_LOAD, N_RUN = 50_000, 25_000
@@ -30,10 +30,10 @@ def main():
         "run_d(read-latest)": (make_run_d(pop, N_RUN), OpKind.GET),
         "run_e(95scan/5i)": (make_run_e(pop, N_RUN // 5), OpKind.SCAN),
     }
-    systems = {
-        "vlsm": LSMConfig.vlsm_default(scale=SCALE),
-        "rocksdb-io": LSMConfig.rocksdb_io_default(scale=SCALE),
-    }
+    # Systems resolve from the policy registry by name — swap in any
+    # registered policy (e.g. add "lazy" or "adoc") to extend the table.
+    systems = {name: get_policy(name).default_config(scale=SCALE)
+               for name in ("vlsm", "rocksdb_io", "lazy")}
     header = f"{'workload':20s}" + "".join(
         f" | {s:>10s} W-p99/R-p99 (ms)" for s in systems)
     print(header)

@@ -5,7 +5,13 @@ all levels but the last) under uniform or Pareto key popularity and
 reports I/O amplification — the paper measures only amplification with
 db_bench, as do we.  ``read_path`` is the read-side companion: a
 read-heavy YCSB-C run that times the DES wall-clock end-to-end, tracking
-the batched LevelIndex GET path.
+the batched LevelIndex GET path.  ``ycsb_a`` measures mixed-workload
+(50% read / 50% update) tails, and ``seekrandom`` scan tails while a
+writer streams.
+
+Policies are resolved from the registry (``repro.core.policies``): every
+registered policy — including ones registered after this file was written
+— gets a row per bench.  ``--policy name[,name...]`` restricts the sweep.
 
 Results are persisted as machine-readable JSON rows (policy, io_amp,
 p99s, sim wall-clock) so the perf trajectory is diffable across commits:
@@ -24,8 +30,11 @@ import numpy as np
 
 from repro.core import DeviceModel, LSMConfig, OpKind, Simulator
 from repro.core import level_index
+from repro.core.policies import get_policy, names as policy_names, \
+    resolve_names
 
-from .workloads import load_keys, make_run_c, make_run_e, pareto_keys
+from .workloads import (load_keys, make_run_a, make_run_c, make_run_e,
+                        pareto_keys)
 
 
 def fillrandom(cfg: LSMConfig, n_ops: int, *, dist: str = "uniform",
@@ -41,7 +50,7 @@ def fillrandom(cfg: LSMConfig, n_ops: int, *, dist: str = "uniform",
     wall = time.perf_counter() - t0
     st = res.stats
     return {
-        "bench": "fillrandom", "dist": dist, "policy": cfg.policy.value,
+        "bench": "fillrandom", "dist": dist, "policy": cfg.policy,
         "ops": n_ops,
         "io_amp": round(st.io_amp, 2), "write_amp": round(st.write_amp, 2),
         "levels_filled": sum(1 for s in sim.trees[0].level_sizes() if s > 0),
@@ -71,13 +80,30 @@ def read_path(cfg: LSMConfig, n_ops: int = 200_000, n_pop: int = 100_000, *,
     g = res.op_types == 1
     return {
         "bench": "read_path", "workload": "run_c",
-        "policy": cfg.policy.value, "ops": n_ops,
+        "policy": cfg.policy, "ops": n_ops,
         "wall_clock_s": round(wall, 3),
         "p99_get_ms": round(res.pct(99, op=1) * 1e3, 3),
         "device_reads": int(sim.stats.device_reads),
         "mean_ssts_probed": round(float(res.get_probed[g].mean()), 3),
         "index_backend": cfg.index_backend or level_index.get_backend(),
     }
+
+
+def _load_settle_run(n_load: int, n_run: int, rate: float,
+                     settle_s: float) -> tuple[np.ndarray, np.ndarray]:
+    """Shared open-loop arrival scaffolding for the measured benches:
+    load-phase flood (1M ops/s), a ``settle_s`` compaction settle (YCSB's
+    wait between load and run), then the measured run at ``rate``."""
+    load = np.arange(n_load, dtype=np.float64) / 1e6
+    run = load[-1] + settle_s + np.arange(n_run, dtype=np.float64) / rate
+    return load, run
+
+
+def _run_phase_stalls(sim: Simulator, n_load: int) -> list[float]:
+    """Stall durations of the measured phase only — the load flood stalls
+    every policy by construction and would drown the signal.  Load ops
+    arrive first, so run-phase ops are exactly the indices >= n_load."""
+    return [d for i, d in sim.stall_events if i >= n_load]
 
 
 def seekrandom(cfg: LSMConfig, n_ops: int = 40_000, n_pop: int = 60_000, *,
@@ -105,9 +131,9 @@ def seekrandom(cfg: LSMConfig, n_ops: int = 40_000, n_pop: int = 60_000, *,
     w_rate = write_rate
     pop = np.unique(load_keys(n_pop, seed))
     spec = make_run_e(pop, n_ops, dist="zipfian", seed=seed + 3)
-    load_arrivals = np.arange(pop.shape[0], dtype=np.float64) / 1e6
-    t_run = load_arrivals[-1] + settle_s
-    run_arrivals = t_run + np.arange(n_ops, dtype=np.float64) / rate
+    load_arrivals, run_arrivals = _load_settle_run(pop.shape[0], n_ops,
+                                                   rate, settle_s)
+    t_run = run_arrivals[0]
     n_wr = int(n_ops / rate * w_rate)
     writer_keys = load_keys(n_wr, seed + 9)
     writer_arrivals = t_run + np.arange(n_wr, dtype=np.float64) / w_rate
@@ -127,14 +153,10 @@ def seekrandom(cfg: LSMConfig, n_ops: int = 40_000, n_pop: int = 60_000, *,
     wall = time.perf_counter() - t0
     sc = res.op_types == OpKind.SCAN
     n_scans = max(1, int(sc.sum()))
-    # Stall columns cover the measured (while-writing) phase only — the
-    # load flood stalls every policy by construction and would otherwise
-    # drown the writer's signal.  Load ops arrive first, so run-phase ops
-    # are exactly the indices >= the population size.
-    run_stalls = [d for i, d in sim.stall_events if i >= pop.shape[0]]
+    run_stalls = _run_phase_stalls(sim, pop.shape[0])
     return {
         "bench": "seekrandom", "workload": "run_e_while_writing",
-        "policy": cfg.policy.value, "ops": n_ops,
+        "policy": cfg.policy, "ops": n_ops,
         "write_rate_ops_s": int(w_rate),
         "p99_scan_ms": round(res.pct(99, op=int(OpKind.SCAN)) * 1e3, 3),
         "p50_scan_ms": round(res.pct(50, op=int(OpKind.SCAN)) * 1e3, 3),
@@ -147,12 +169,62 @@ def seekrandom(cfg: LSMConfig, n_ops: int = 40_000, n_pop: int = 60_000, *,
     }
 
 
+def ycsb_a(cfg: LSMConfig, n_ops: int = 60_000, n_pop: int = 60_000, *,
+           scale: int | None = None, rate: float = 2_500.0,
+           settle_s: float = 10.0, seed: int = 7) -> dict:
+    """YCSB-A mixed tails (50% zipfian GET / 50% update, §6.3 / Fig 12).
+
+    Load-phase flood, a short compaction settle, then the measured run at
+    a fixed arrival rate common to every policy — the open-loop,
+    coordinated-omission-free methodology.  The default rate sits inside
+    every policy's sustainable region at the benchmark scale (the same
+    fixed-rate convention as ``seekrandom``'s writer), so tails compare
+    compaction interference rather than queue divergence.  The update
+    half keeps compactions continuously in play, so the GET tail captures
+    each policy's compaction interference: the paper's read-tail
+    mechanism (P99 reads up to 12.5x between policies)."""
+    scale = scale or cfg.memtable_size
+    lam = scale / (64 << 20)
+    pop = np.unique(load_keys(n_pop, seed))
+    spec = make_run_a(pop, n_ops, dist="zipfian")
+    load_arrivals, run_arrivals = _load_settle_run(pop.shape[0], n_ops,
+                                                   rate, settle_s)
+    op_types = np.concatenate([np.zeros(pop.shape[0], np.uint8),
+                               spec.op_types])
+    keys = np.concatenate([pop, spec.keys])
+    arrivals = np.concatenate([load_arrivals, run_arrivals])
+    sim = Simulator(cfg, DeviceModel.scaled(lam))
+    t0 = time.perf_counter()
+    res = sim.run(op_types, keys, arrivals)
+    wall = time.perf_counter() - t0
+    n_load = pop.shape[0]
+    run_lat = res.latency[n_load:]
+    run_types = res.op_types[n_load:]
+    get_lat = run_lat[run_types == OpKind.GET]
+    put_lat = run_lat[run_types == OpKind.PUT]
+    run_stalls = _run_phase_stalls(sim, n_load)
+    return {
+        "bench": "ycsb_a", "workload": "run_a", "dist": "zipfian",
+        "policy": cfg.policy, "ops": n_ops, "rate_ops_s": int(rate),
+        "p50_get_ms": round(float(np.percentile(get_lat, 50)) * 1e3, 3),
+        "p99_get_ms": round(float(np.percentile(get_lat, 99)) * 1e3, 3),
+        "p99_put_ms": round(float(np.percentile(put_lat, 99)) * 1e3, 3),
+        "stall_total_s": round(sum(run_stalls), 4),
+        "n_stalls": len(run_stalls),
+        "io_amp": round(sim.stats.io_amp, 2),
+        "wall_clock_s": round(wall, 3),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default="BENCH_dbbench.json",
                     help="write JSON rows here ('' disables)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes (~10x fewer ops)")
+    ap.add_argument("--policy", default="all",
+                    help="registry policy name(s), comma-separated, or "
+                         f"'all' (registered: {', '.join(policy_names())})")
     args = ap.parse_args(argv)
     scale = 1 << 18
     n_fill = 12_000 if args.quick else 120_000
@@ -160,30 +232,35 @@ def main(argv=None):
     n_pop = 10_000 if args.quick else 100_000
     n_scan = 4_000 if args.quick else 40_000
     n_scan_pop = 10_000 if args.quick else 60_000
+    n_mixed = 8_000 if args.quick else 60_000
+    n_mixed_pop = 10_000 if args.quick else 60_000
+
+    # Resolve the policy sweep from the registry: a policy registered
+    # tomorrow shows up in every bench below with zero edits here.
+    chosen = resolve_names(args.policy)
+
+    def cfg_for(name: str) -> LSMConfig:
+        return get_policy(name).default_config(scale=scale)
 
     rows = []
     for dist in ("uniform", "pareto"):
-        for name, cfg in (
-                ("vlsm", LSMConfig.vlsm_default(scale=scale)),
-                ("rocksdb", LSMConfig.rocksdb_default(scale=scale)),
-                ("adoc", LSMConfig.adoc_default(scale=scale))):
-            row = fillrandom(cfg, n_fill, dist=dist, scale=scale)
+        for name in chosen:
+            row = fillrandom(cfg_for(name), n_fill, dist=dist, scale=scale)
             rows.append(row)
             print(f"db_bench.{dist}.{name}: {row}")
-    for name, cfg in (("vlsm", LSMConfig.vlsm_default(scale=scale)),
-                      ("rocksdb_io", LSMConfig.rocksdb_io_default(scale=scale))):
-        row = read_path(cfg, n_read, n_pop, scale=scale)
+    for name in chosen:
+        row = read_path(cfg_for(name), n_read, n_pop, scale=scale)
         rows.append(row)
         print(f"db_bench.read_path.{name}: {row}")
-    # seekrandom / YCSB-E: scan tails for ALL five policies at the same
-    # memory budget (same `scale`) and the same request rate.
-    for name, cfg in (
-            ("vlsm", LSMConfig.vlsm_default(scale=scale)),
-            ("rocksdb", LSMConfig.rocksdb_default(scale=scale)),
-            ("rocksdb_io", LSMConfig.rocksdb_io_default(scale=scale)),
-            ("adoc", LSMConfig.adoc_default(scale=scale)),
-            ("lsmi", LSMConfig.lsmi_default(scale=scale))):
-        row = seekrandom(cfg, n_scan, n_scan_pop, scale=scale)
+    # ycsb_a: mixed read/update tails for every policy at the same memory
+    # budget (same `scale`) and the same request rate.
+    for name in chosen:
+        row = ycsb_a(cfg_for(name), n_mixed, n_mixed_pop, scale=scale)
+        rows.append(row)
+        print(f"db_bench.ycsb_a.{name}: {row}")
+    # seekrandom / YCSB-E: scan tails for every policy.
+    for name in chosen:
+        row = seekrandom(cfg_for(name), n_scan, n_scan_pop, scale=scale)
         rows.append(row)
         print(f"db_bench.seekrandom.{name}: {row}")
     if args.json:

@@ -2,17 +2,26 @@
 
 Public API::
 
-    from repro.core import (LSMConfig, Policy, DeviceModel, LSMTree,
-                            Simulator, OpKind, RequestBatch, ResultBatch)
+    from repro.core import (LSMConfig, DeviceModel, LSMTree, Simulator,
+                            OpKind, RequestBatch, ResultBatch,
+                            CompactionPolicy, get_policy, policies)
 
 ``LSMTree.apply_batch(RequestBatch) -> ResultBatch`` is the single typed
 operation entry point (PUT/GET/DELETE/SCAN); ``put_batch`` / ``get_batch``
 / ``delete_batch`` / ``scan_batch`` are thin wrappers over it.
+
+Compaction behaviour is a registry-backed strategy layer
+(:mod:`repro.core.policies`): ``LSMConfig.policy`` names a registered
+``CompactionPolicy`` and the mechanism (``LSMTree``/``Simulator``) never
+branches on it.  The legacy ``Policy`` str-enum survives as aliases for
+the five seed policy names.
 """
 
+from . import policies
 from .level_index import LevelIndex
 from .lsm import Job, LSMTree
 from .memtable import Memtable
+from .policies import CompactionPolicy, get_policy
 from .sim import SimResult, Simulator
 from .sst import SST
 from .stats import ChainRecord, Stats
@@ -20,7 +29,8 @@ from .types import (DeviceModel, LSMConfig, OpKind, Policy, RequestBatch,
                     ResultBatch)
 
 __all__ = [
-    "ChainRecord", "DeviceModel", "Job", "LSMConfig", "LSMTree",
-    "LevelIndex", "Memtable", "OpKind", "Policy", "RequestBatch",
-    "ResultBatch", "SST", "SimResult", "Simulator", "Stats",
+    "ChainRecord", "CompactionPolicy", "DeviceModel", "Job", "LSMConfig",
+    "LSMTree", "LevelIndex", "Memtable", "OpKind", "Policy", "RequestBatch",
+    "ResultBatch", "SST", "SimResult", "Simulator", "Stats", "get_policy",
+    "policies",
 ]

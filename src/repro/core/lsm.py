@@ -1,4 +1,4 @@
-"""The LSM tree with compaction chains — vLSM (§4) and the baselines (§3).
+"""The LSM *mechanism* engine: memtable, flush, splice, merge, read paths.
 
 Structural state (which SSTs live where) mutates *eagerly* when a compaction
 is triggered; *time* is owned by the discrete-event simulation in
@@ -8,18 +8,15 @@ completion times.  This split keeps the store's merge work 100% real (actual
 sorted-array merges over actual keys — real overlaps, real vSST splits, real
 amplification) while staying deterministic and replayable on CPU.
 
-Policies (Fig. 3 of the paper):
-
-* ``rocksdb`` / ``rocksdb_io`` / ``adoc`` — tiering compaction in L0: when L0
-  fills, *all* L0 SSTs merge with *all* overlapping L1 SSTs (the wide first
-  chain stage), after a bottom-up cascade frees L1.  ``rocksdb`` allows
-  bounded compaction debt, ``rocksdb_io`` none, ``adoc`` large debt plus
-  batched background compactions (the scheduling approach).
-* ``lsmi`` — incremental without tiering and fixed-size L1 SSTs (Fig 3a):
-  one L0 SST at a time but every compaction rewrites the whole overlap.
-* ``vlsm`` — no tiering (single FIFO L0 SST per compaction), small SSTs,
-  growth factor ``phi`` between L1 and L2, and overlap-aware vSSTs in L1 with
-  good/poor selection (§4.2).
+This module is **policy-agnostic**: every compaction *decision* — L0
+strategy, level pick/scoring, SST sizing, stall/debt parameters, invariants
+— is delegated to the ``CompactionPolicy`` object resolved from
+``cfg.policy`` via the registry in :mod:`repro.core.policies` (the paper's
+Fig 3 designs plus lazy leveling).  The strategy hooks call back into the
+mechanism primitives exposed here: :meth:`LSMTree.overlap`,
+:meth:`LSMTree.merge_runs`, :meth:`LSMTree.merge_down`,
+:meth:`LSMTree.replace_in_level`, :meth:`LSMTree.strip_bottom_tombstones`,
+and :meth:`LSMTree.emit_compact_job`.
 """
 
 from __future__ import annotations
@@ -32,11 +29,11 @@ import numpy as np
 from . import merge as merge_backend
 from .level_index import LevelIndex, bloom_false_positives
 from .memtable import Memtable
+from .policies import get_policy
 from .sst import SST, split_fixed, total_size
 from .stats import ChainRecord, Stats
-from .types import (LSMConfig, OpKind, Policy, RequestBatch, ResultBatch,
+from .types import (LSMConfig, OpKind, RequestBatch, ResultBatch,
                     seq_decode, seq_encode)
-from .vsst import plan_vssts, select_good_vssts
 
 _job_ids = itertools.count()
 
@@ -69,6 +66,9 @@ class LSMTree:
 
     def __init__(self, cfg: LSMConfig, stats: Stats | None = None):
         self.cfg = cfg
+        # The strategy object owning every compaction decision; the tree
+        # itself is a policy-agnostic mechanism engine.
+        self.policy = get_policy(cfg.policy)
         self.stats = stats if stats is not None else Stats()
         self.memtable = Memtable(cfg.memtable_size, cfg.kv_size)
         self.immutables: list[Memtable] = []
@@ -170,7 +170,8 @@ class LSMTree:
         if len(l0) >= self.cfg.l0_max_ssts:
             chain_jobs = self._compact_l0_trigger()
         blocking: list[Job] = []
-        if len(self.levels[0]) >= self.cfg.l0_stop_ssts and chain_jobs:
+        if (len(self.levels[0]) >= self.policy.l0_stop_ssts(self.cfg)
+                and chain_jobs):
             blocking = [chain_jobs[-1]]  # chain head: the L0 compaction
         mt = self.immutables.pop(0)
         sst = mt.to_sst()
@@ -219,151 +220,42 @@ class LSMTree:
     def _compact_from(self, level: int) -> tuple[list[Job], list[int]]:
         """Compact from ``level`` into ``level+1``, first ensuring space
         below (the dependent chain).  Deeper jobs precede shallower ones and
-        the shallower job depends on them."""
+        the shallower job depends on them.  *What* gets compacted is the
+        strategy object's call (``compact_l0`` / ``pick_compaction``)."""
         cfg = self.cfg
         jobs: list[Job] = []
         stage_bytes: list[int] = []
-        incoming = self._incoming_bytes(level)
+        incoming = self.policy.incoming_bytes(self, level)
         # Ensure the target level has room (unless it is the last level).
         if level + 1 < cfg.max_levels - 1:
             while (total_size(self.levels[level + 1]) + incoming
-                   > cfg.level_limit(level + 1)):
+                   > self.policy.level_limit(cfg, level + 1)):
                 sub, sub_stage = self._compact_from(level + 1)
                 if not sub:
                     break
                 jobs.extend(sub)
                 stage_bytes.extend(sub_stage)
         deps = [jobs[-1]] if jobs else []
-        job = self._do_compact(level, deps)
+        if level == 0:
+            job = self.policy.compact_l0(self, deps)
+        else:
+            job = self.policy.pick_compaction(self, level, deps)
         if job is not None:
             jobs.append(job)
             stage_bytes.append(job.total_bytes)
         return jobs, stage_bytes
 
-    def _incoming_bytes(self, level: int) -> int:
-        cfg = self.cfg
-        if level == 0:
-            if cfg.tiering:
-                return total_size(self.levels[0])
-            return self.levels[0][0].size if self.levels[0] else cfg.sst_size
-        return cfg.sst_size
-
-    def _do_compact(self, level: int, deps: list[Job]) -> Job | None:
-        cfg = self.cfg
-        if level == 0:
-            if cfg.tiering:
-                return self._tiering_l0(deps)
-            return self._incremental_l0(deps)
-        if cfg.policy == Policy.VLSM and level == 1:
-            return self._vlsm_l1(deps)
-        return self._leveled_pick(level, deps)
-
-    # --- L0 stage variants -------------------------------------------------
-    def _tiering_l0(self, deps: list[Job]) -> Job | None:
-        """RocksDB-family: merge ALL of L0 with ALL overlapping L1."""
-        l0 = self.levels[0]
-        if not l0:
-            return None
-        lo = int(self.index.smallest[0].min())
-        hi = int(self.index.largest[0].max())
-        l1_over = self._overlap(1, lo, hi)
-        runs = [(s.keys, s.seqs) for s in reversed(l0)]  # newest first
-        runs += [(s.keys, s.seqs) for s in l1_over]
+    # --- mechanism primitives (the strategy objects' toolbox) ---------------
+    def merge_runs(self, runs: list[tuple[np.ndarray, np.ndarray]]
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """Latest-wins k-way merge through the configured backend, with the
+        merged-key accounting every compaction stage charges."""
         keys, seqs = merge_backend.merge_runs(runs)
         self.stats.merged_keys += int(keys.shape[0])
-        keys, seqs = self._strip_bottom_tombstones(1, keys, seqs)
-        new = split_fixed(keys, seqs, self.cfg.kv_size, self.cfg.sst_size)
-        self._replace_in_level(1, l1_over, new)
-        read_b = total_size(l0) + total_size(l1_over)
-        write_b = sum(s.size for s in new)
-        n_l0 = len(l0)
-        self.levels[0] = []
-        self.index.l0_clear()
-        job = self._emit_compact_job(0, read_b, write_b,
-                                     n_l0 + len(l1_over), len(new), deps)
-        job.l0_consumed = n_l0
-        return job
+        return keys, seqs
 
-    def _incremental_l0(self, deps: list[Job]) -> Job | None:
-        """vLSM / LSMi: pick ONE L0 SST (FIFO) and merge into L1."""
-        l0 = self.levels[0]
-        if not l0:
-            return None
-        src = l0.pop(0)  # FIFO: oldest first (vLSM §4.1)
-        self.index.l0_popleft()
-        l1_over = self._overlap(1, src.smallest, src.largest)
-        runs = [(src.keys, src.seqs)] + [(s.keys, s.seqs) for s in l1_over]
-        keys, seqs = merge_backend.merge_runs(runs)
-        self.stats.merged_keys += int(keys.shape[0])
-        keys, seqs = self._strip_bottom_tombstones(1, keys, seqs)
-        if self.cfg.policy == Policy.VLSM:
-            new = self._build_vssts(keys, seqs)
-        else:
-            new = split_fixed(keys, seqs, self.cfg.kv_size, self.cfg.sst_size)
-        self._replace_in_level(1, l1_over, new)
-        read_b = src.size + total_size(l1_over)
-        write_b = sum(s.size for s in new)
-        job = self._emit_compact_job(0, read_b, write_b,
-                                     1 + len(l1_over), len(new), deps)
-        job.l0_consumed = 1
-        return job
-
-    def _build_vssts(self, keys: np.ndarray, seqs: np.ndarray) -> list[SST]:
-        """Cut the merged L1 stream into overlap-aware vSSTs (§4.2)."""
-        cfg = self.cfg
-        fence_lo, fence_hi = self.index.fences(2)
-        plans = plan_vssts(keys, cfg.kv_size, cfg.s_m, cfg.s_M,
-                           cfg.growth_factor, fence_lo, fence_hi, cfg.sst_size)
-        self.stats.overlap_probes += int(keys.shape[0])  # per-key look-ahead
-        out: list[SST] = []
-        for p in plans:
-            sst = SST(keys[p.start:p.end], seqs[p.start:p.end], cfg.kv_size)
-            out.append(sst)
-            if p.good:
-                self.stats.vssts_good += 1
-                self.stats.vsst_good_bytes += sst.size
-            else:
-                self.stats.vssts_poor += 1
-                self.stats.vsst_poor_bytes += sst.size
-        return out
-
-    # --- L1+ stage variants --------------------------------------------------
-    def _vlsm_l1(self, deps: list[Job]) -> Job | None:
-        """§4.2.2: compact a set of *good* vSSTs whose cumulative size frees
-        room for the next L0 SST."""
-        cfg = self.cfg
-        l1 = self.levels[1]
-        if not l1:
-            return None
-        fence_lo, fence_hi = self.index.fences(2)
-        # One batched overlap query scores every L1 vSST against L2.
-        ov = self.index.overlap_counts(2, *self.index.fences(1))
-        picked = select_good_vssts(l1, fence_lo, fence_hi, cfg.sst_size,
-                                   cfg.growth_factor, cfg.sst_size, ov=ov)
-        self.stats.overlap_probes += len(l1)
-        if not picked:
-            # Φ too large: no good vSSTs exist (paper's Fig 13 failure mode).
-            # Fall back to the least-bad vSST so the store still progresses.
-            ratios = ov * cfg.sst_size / np.maximum(1, self.index.sizes[1])
-            picked = [int(np.argmin(ratios))]
-        return self._merge_down_multi(1, picked, deps)
-
-    def _leveled_pick(self, level: int, deps: list[Job]) -> Job | None:
-        """RocksDB's default scheduler: min overlap-ratio SST(s) first."""
-        cfg = self.cfg
-        src_level = self.levels[level]
-        if not src_level:
-            return None
-        # One batched fence query scores the whole level (was a per-SST scan).
-        scores = (self.index.overlap_bytes(level, level + 1)
-                  / np.maximum(1, self.index.sizes[level]))
-        n_pick = cfg.adoc_batch if cfg.policy == Policy.ADOC else 1
-        order = np.lexsort((np.arange(scores.shape[0]), scores))
-        picked = [int(i) for i in order[:n_pick]]
-        return self._merge_down_multi(level, picked, deps)
-
-    def _merge_down_multi(self, level: int, picked_idx: list[int],
-                          deps: list[Job]) -> Job | None:
+    def merge_down(self, level: int, picked_idx: list[int],
+                   deps: list[Job]) -> Job | None:
         """Merge the picked SSTs from ``level`` into ``level+1``.
 
         Picked SSTs are grouped into *contiguous* runs (by position in the
@@ -392,14 +284,13 @@ class LSMTree:
         for group in groups:
             lo = min(s.smallest for s in group)
             hi = max(s.largest for s in group)
-            over = self._overlap(level + 1, lo, hi)
+            over = self.overlap(level + 1, lo, hi)
             runs = [(s.keys, s.seqs) for s in group]
             runs += [(s.keys, s.seqs) for s in over]
-            keys, seqs = merge_backend.merge_runs(runs)
-            self.stats.merged_keys += int(keys.shape[0])
-            keys, seqs = self._strip_bottom_tombstones(level + 1, keys, seqs)
+            keys, seqs = self.merge_runs(runs)
+            keys, seqs = self.strip_bottom_tombstones(level + 1, keys, seqs)
             new = split_fixed(keys, seqs, cfg.kv_size, cfg.sst_size)
-            self._replace_in_level(level + 1, over, new)
+            self.replace_in_level(level + 1, over, new)
             guids = {s.uid for s in group}
             self.levels[level] = [s for s in self.levels[level]
                                   if s.uid not in guids]
@@ -408,13 +299,12 @@ class LSMTree:
             write_b += sum(s.size for s in new)
             n_in += len(group) + len(over)
             n_out += len(new)
-        return self._emit_compact_job(level, read_b, write_b, n_in, n_out,
-                                      deps)
+        return self.emit_compact_job(level, read_b, write_b, n_in, n_out,
+                                     deps)
 
-    # --- shared helpers ------------------------------------------------------
-    def _strip_bottom_tombstones(self, target_level: int, keys: np.ndarray,
-                                 seqs: np.ndarray
-                                 ) -> tuple[np.ndarray, np.ndarray]:
+    def strip_bottom_tombstones(self, target_level: int, keys: np.ndarray,
+                                seqs: np.ndarray
+                                ) -> tuple[np.ndarray, np.ndarray]:
         """Drop DELETE markers from a merge writing the bottom level — no
         older version can exist below it, so the marker is reclaimable."""
         if target_level != self.cfg.max_levels - 1 or keys.shape[0] == 0:
@@ -428,14 +318,14 @@ class LSMTree:
         keep = ~tomb
         return keys[keep], seqs[keep]
 
-    def _overlap(self, level: int, lo: int, hi: int) -> list[SST]:
+    def overlap(self, level: int, lo: int, hi: int) -> list[SST]:
         """SSTs of a sorted, disjoint level intersecting [lo, hi] — the
         manifest's fence query (always a contiguous slice)."""
         start, end = self.index.overlap_slice(level, lo, hi)
         return self.levels[level][start:end]
 
-    def _replace_in_level(self, level: int, old: list[SST],
-                          new: list[SST]) -> None:
+    def replace_in_level(self, level: int, old: list[SST],
+                         new: list[SST]) -> None:
         """Splice ``new`` into the level where ``old`` (a contiguous span of
         the sorted level, possibly empty) sat; keeps the manifest arrays in
         lock-step incrementally."""
@@ -455,8 +345,8 @@ class LSMTree:
         self.levels[level] = lvl[:start] + new_live + lvl[end:]
         self.index.splice(level, start, end, new_live)
 
-    def _emit_compact_job(self, level: int, read_b: int, write_b: int,
-                          n_in: int, n_out: int, deps: list[Job]) -> Job:
+    def emit_compact_job(self, level: int, read_b: int, write_b: int,
+                         n_in: int, n_out: int, deps: list[Job]) -> Job:
         self.stats.compact_bytes_read += read_b
         self.stats.compact_bytes_written += write_b
         self.stats.ssts_created += n_out
@@ -470,18 +360,19 @@ class LSMTree:
         """Soft over-target compactions (debt designs run these proactively;
         everyone runs them to converge after bursts).
 
-        ADOC intentionally lets levels run *past* target (compaction debt,
-        §3.3) and only compacts in big batches once they exceed 1.5× target
-        — that is the mechanism by which it trades I/O amplification
+        The strategy object sets the soft factor: debt designs (ADOC) let
+        levels run *past* target and only compact in big batches once they
+        exceed ``soft_limit_factor`` × target — trading I/O amplification
         (larger overlaps while overfull) for fewer stalls.
         """
         jobs: list[Job] = []
         cfg = self.cfg
-        soft = 1.5 if cfg.policy == Policy.ADOC else 1.0
+        soft = self.policy.soft_limit_factor
         for level in range(1, cfg.max_levels - 1):
             guard = 0
             while (total_size(self.levels[level])
-                   > soft * cfg.level_target(level) and guard < 64):
+                   > soft * self.policy.level_target(cfg, level)
+                   and guard < 64):
                 sub, _sb = self._compact_from(level)
                 if not sub:
                     break
@@ -490,6 +381,10 @@ class LSMTree:
         return jobs
 
     def drain_jobs(self) -> list[Job]:
+        if self.cfg.paranoid_checks and self.pending_jobs:
+            # every structural mutation pass is validated before its jobs
+            # reach the scheduler (on in tests, off in benchmarks)
+            self.check_invariants()
         out, self.pending_jobs = self.pending_jobs, []
         return out
 
@@ -775,6 +670,8 @@ class LSMTree:
         return n + sum(s.n for lvl in self.levels for s in lvl)
 
     def check_invariants(self) -> None:
+        """Mechanism invariants (index mirroring, SST sortedness, level
+        disjointness) plus the strategy object's policy-specific ones."""
         from .sst import level_check_disjoint
         self.index.check_against(self.levels)
         for sst in self.levels[0]:
@@ -783,13 +680,7 @@ class LSMTree:
             for sst in self.levels[level]:
                 sst.check_invariants()
             level_check_disjoint(self.levels[level])
-        if self.cfg.policy == Policy.VLSM:
-            for sst in self.levels[1]:
-                # S_M plus the tail-absorption slack: a trailing fragment
-                # smaller than S_m merges into its predecessor (§4.2), so a
-                # vSST may legitimately reach S_M + S_m.
-                assert sst.size <= self.cfg.s_M + self.cfg.s_m + self.cfg.kv_size, \
-                    "vSST exceeds S_M + S_m tail slack"
+        self.policy.check_invariants(self)
 
     def merged_view(self) -> dict[int, int]:
         """Ground-truth *live* key -> latest logical seq, for tests.

@@ -1,0 +1,33 @@
+"""Registry-backed compaction policies (the policy/mechanism split).
+
+``LSMTree`` and ``Simulator`` are policy-agnostic mechanism engines; every
+compaction decision — L0 strategy, level pick/scoring, SST sizing, stall
+and debt parameters, config defaults, policy invariants — lives in a
+:class:`CompactionPolicy` object resolved by name::
+
+    from repro.core.policies import get_policy, names, default_configs
+
+    cfg = get_policy("lazy").default_config(scale=1 << 18)
+    names()  # ['vlsm', 'rocksdb', 'rocksdb_io', 'adoc', 'lsmi', 'lazy']
+
+Importing this package registers the six built-in policies (registration
+order below is the canonical bench order).  Third-party policies register
+with :func:`register` and immediately resolve everywhere by name.
+"""
+
+from .base import CompactionPolicy
+from .registry import (default_configs, get, names, register,
+                       resolve_names)
+
+# Built-in policies self-register on import (canonical order: the paper's
+# Fig 3 designs first, then the lazy-leveling proof-of-API policy).
+from . import vlsm as _vlsm          # noqa: E402,F401
+from . import rocksdb as _rocksdb    # noqa: E402,F401  (rocksdb, rocksdb_io)
+from . import adoc as _adoc          # noqa: E402,F401
+from . import lsmi as _lsmi          # noqa: E402,F401
+from . import lazy as _lazy          # noqa: E402,F401
+
+get_policy = get
+
+__all__ = ["CompactionPolicy", "default_configs", "get", "get_policy",
+           "names", "register", "resolve_names"]

@@ -1,0 +1,175 @@
+"""The abstract ``CompactionPolicy`` strategy interface.
+
+The paper's core contribution is a *policy* (small SSTs, no L0 tiering,
+large L1->L2 growth, overlap-aware L1 vSSTs) layered on an unchanged LSM
+*mechanism*.  This module makes that split first-class: ``LSMTree`` owns
+the mechanism (memtable, flush, splice, merge, LevelIndex, read paths) and
+every compaction *decision* is delegated to a ``CompactionPolicy`` object
+resolved by registry name (:mod:`repro.core.policies.registry`).
+
+A policy owns:
+
+* **L0 strategy** — :meth:`compact_l0`, built from the two shared bodies
+  :meth:`_tiering_l0` (merge ALL of L0 with ALL overlapping L1, RocksDB
+  family) and :meth:`_incremental_l0` (pop ONE FIFO L0 SST, vLSM/LSMi);
+* **level pick & scoring** — :meth:`pick_compaction` (default: RocksDB's
+  min overlap-ratio scheduler over the LevelIndex fence arrays);
+* **SST sizing & build** — :meth:`build_l1_ssts` (default: fixed-size
+  ``split_fixed``; vLSM overrides with overlap-aware vSST planning);
+* **stall / debt parameters** — :attr:`soft_limit_factor`,
+  :meth:`level_target` / :meth:`level_limit`, and the DES stall gates
+  :meth:`l0_stop_ssts` / :meth:`write_buffer_limit`;
+* **config defaults** — :meth:`default_config`, the policy's canned
+  ``LSMConfig`` (what ``LSMConfig.rocksdb_default`` et al. delegate to);
+* **policy-specific invariants** — :meth:`check_invariants`, run by the
+  mechanism's own invariant sweep (continuously when
+  ``cfg.paranoid_checks`` is on).
+
+Writing a new policy means subclassing this, overriding the hooks that
+differ, and calling ``registry.register(YourPolicy())`` — no edits to
+``lsm.py`` / ``sim.py``.  ``repro.core.policies.lazy`` is the worked
+example.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from ..sst import split_fixed, total_size
+from ..types import LSMConfig
+
+if TYPE_CHECKING:  # mechanism types, imported lazily to avoid a cycle
+    from ..lsm import Job, LSMTree
+
+
+class CompactionPolicy:
+    """Strategy base class: every hook has the RocksDB-leveled default."""
+
+    #: registry key; also the value carried in ``LSMConfig.policy``
+    name: str = ""
+    #: does L0 use a tiering (merge-all) compaction step?
+    tiering_l0: bool = False
+    #: background compactions fire once a level exceeds
+    #: ``soft_limit_factor * level_target`` (ADOC's debt batching uses 1.5)
+    soft_limit_factor: float = 1.0
+
+    # ------------------------------------------------------ configuration
+    def default_config(self, scale: int = 1 << 20, **kw) -> LSMConfig:
+        """The policy's canned ``LSMConfig`` at a byte ``scale`` standing
+        in for the paper's 64 MB."""
+        raise NotImplementedError
+
+    def level_target(self, cfg: LSMConfig, level: int) -> int:
+        """Target size in bytes for ``level`` (L0 target is the trigger
+        occupancy).  Default: L1 sized like L0, then geometric growth."""
+        if level < 1:
+            return cfg.l0_max_ssts * cfg.memtable_size
+        l1 = cfg.l0_max_ssts * cfg.memtable_size
+        return l1 * cfg.growth_factor ** (level - 1)
+
+    def level_limit(self, cfg: LSMConfig, level: int) -> int:
+        """Hard limit including compaction debt (overflow)."""
+        return int(self.level_target(cfg, level) * (1.0 + cfg.debt_factor))
+
+    # --------------------------------------------------- DES stall gates
+    def l0_stop_ssts(self, cfg: LSMConfig) -> int:
+        """Temporal L0 occupancy at which the DES write-stops the queue."""
+        return cfg.l0_stop_ssts
+
+    def write_buffer_limit(self, cfg: LSMConfig) -> int:
+        """Write buffers (active + immutable) before a write-buffer stall."""
+        return cfg.max_write_buffers
+
+    # ------------------------------------------------ structural strategy
+    def pick_batch(self, cfg: LSMConfig) -> int:
+        """SSTs picked per L1+ compaction job (ADOC batches several)."""
+        return 1
+
+    def incoming_bytes(self, tree: "LSMTree", level: int) -> int:
+        """Bytes one compaction from ``level`` pushes into ``level + 1`` —
+        what the chain's room-making recursion must clear below."""
+        cfg = tree.cfg
+        if level == 0:
+            if self.tiering_l0:
+                return total_size(tree.levels[0])
+            return tree.levels[0][0].size if tree.levels[0] else cfg.sst_size
+        return cfg.sst_size
+
+    def compact_l0(self, tree: "LSMTree", deps: list["Job"]) -> "Job | None":
+        """One L0 compaction pass (L0 is at its trigger)."""
+        if self.tiering_l0:
+            return self._tiering_l0(tree, deps)
+        return self._incremental_l0(tree, deps)
+
+    def pick_compaction(self, tree: "LSMTree", level: int,
+                        deps: list["Job"]) -> "Job | None":
+        """Compact from ``level >= 1`` into ``level + 1``.  Default:
+        RocksDB's scheduler — min overlap-ratio SST(s) first, scored with
+        one batched LevelIndex fence query."""
+        if not tree.levels[level]:
+            return None
+        scores = (tree.index.overlap_bytes(level, level + 1)
+                  / np.maximum(1, tree.index.sizes[level]))
+        order = np.lexsort((np.arange(scores.shape[0]), scores))
+        picked = [int(i) for i in order[:self.pick_batch(tree.cfg)]]
+        return tree.merge_down(level, picked, deps)
+
+    def build_l1_ssts(self, tree: "LSMTree", keys: np.ndarray,
+                      seqs: np.ndarray) -> list:
+        """Cut an L0->L1 merged stream into L1 SSTs (the sizing hook).
+        Default: fixed-size SSTs; vLSM builds overlap-aware vSSTs."""
+        cfg = tree.cfg
+        return split_fixed(keys, seqs, cfg.kv_size, cfg.sst_size)
+
+    def check_invariants(self, tree: "LSMTree") -> None:
+        """Policy-specific structural invariants (on top of the mechanism's
+        sortedness/disjointness/index checks).  Default: none."""
+
+    # ------------------------------------- shared L0 strategy bodies
+    def _tiering_l0(self, tree: "LSMTree", deps: list["Job"]) -> "Job | None":
+        """RocksDB-family: merge ALL of L0 with ALL overlapping L1."""
+        l0 = tree.levels[0]
+        if not l0:
+            return None
+        lo = int(tree.index.smallest[0].min())
+        hi = int(tree.index.largest[0].max())
+        l1_over = tree.overlap(1, lo, hi)
+        runs = [(s.keys, s.seqs) for s in reversed(l0)]  # newest first
+        runs += [(s.keys, s.seqs) for s in l1_over]
+        keys, seqs = tree.merge_runs(runs)
+        keys, seqs = tree.strip_bottom_tombstones(1, keys, seqs)
+        new = self.build_l1_ssts(tree, keys, seqs)
+        tree.replace_in_level(1, l1_over, new)
+        read_b = total_size(l0) + total_size(l1_over)
+        write_b = sum(s.size for s in new)
+        n_l0 = len(l0)
+        tree.levels[0] = []
+        tree.index.l0_clear()
+        job = tree.emit_compact_job(0, read_b, write_b,
+                                    n_l0 + len(l1_over), len(new), deps)
+        job.l0_consumed = n_l0
+        return job
+
+    def _incremental_l0(self, tree: "LSMTree",
+                        deps: list["Job"]) -> "Job | None":
+        """vLSM / LSMi: pick ONE L0 SST (FIFO) and merge into L1, building
+        the outputs through :meth:`build_l1_ssts`."""
+        l0 = tree.levels[0]
+        if not l0:
+            return None
+        src = l0.pop(0)  # FIFO: oldest first (vLSM §4.1)
+        tree.index.l0_popleft()
+        l1_over = tree.overlap(1, src.smallest, src.largest)
+        runs = [(src.keys, src.seqs)] + [(s.keys, s.seqs) for s in l1_over]
+        keys, seqs = tree.merge_runs(runs)
+        keys, seqs = tree.strip_bottom_tombstones(1, keys, seqs)
+        new = self.build_l1_ssts(tree, keys, seqs)
+        tree.replace_in_level(1, l1_over, new)
+        read_b = src.size + total_size(l1_over)
+        write_b = sum(s.size for s in new)
+        job = tree.emit_compact_job(0, read_b, write_b,
+                                    1 + len(l1_over), len(new), deps)
+        job.l0_consumed = 1
+        return job

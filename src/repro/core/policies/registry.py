@@ -1,0 +1,54 @@
+"""Name -> CompactionPolicy registry (the policy resolution surface).
+
+Benchmarks, the CLI (``benchmarks/run.py --policy``), tests, and the
+mechanism itself resolve policies through :func:`get`; registering a new
+policy makes it show up everywhere (CI smoke, db_bench rows, the
+policy-invariance property test) with zero workflow edits.
+"""
+
+from __future__ import annotations
+
+from .base import CompactionPolicy
+
+_REGISTRY: dict[str, CompactionPolicy] = {}
+
+
+def register(policy: CompactionPolicy) -> CompactionPolicy:
+    """Register a policy instance under ``policy.name``; returns it."""
+    if not policy.name:
+        raise ValueError("policy must set a non-empty .name")
+    if policy.name in _REGISTRY:
+        raise ValueError(f"compaction policy {policy.name!r} is already "
+                         f"registered (by {type(_REGISTRY[policy.name]).__name__})")
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def get(name) -> CompactionPolicy:
+    """Resolve a policy by registry name (str, or anything carrying a
+    ``.value`` name — the legacy ``Policy`` enum members do)."""
+    key = getattr(name, "value", name)
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown compaction policy {key!r}; registered policies: "
+            f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def names() -> list[str]:
+    """Registered policy names, in registration (canonical bench) order."""
+    return list(_REGISTRY)
+
+
+def default_configs(scale: int = 1 << 20) -> dict:
+    """``{name: policy.default_config(scale)}`` for every registered policy."""
+    return {n: p.default_config(scale) for n, p in _REGISTRY.items()}
+
+
+def resolve_names(spec: str) -> list[str]:
+    """CLI policy-sweep resolution: ``"all"`` -> every registered name, else
+    a comma-separated (whitespace-tolerant) list validated via :func:`get`."""
+    if spec == "all":
+        return names()
+    return [get(p.strip()).name for p in spec.split(",")]

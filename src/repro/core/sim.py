@@ -36,6 +36,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .lsm import Job, LSMTree
+from .policies import get_policy
 from .stats import Stats
 from .types import DeviceModel, LSMConfig, OpKind, RequestBatch
 
@@ -139,6 +140,9 @@ class Simulator:
     def __init__(self, cfg: LSMConfig, device: DeviceModel | None = None,
                  n_regions: int = 1):
         self.cfg = cfg
+        # Stall gates (write-stop occupancy, write-buffer allowance) are the
+        # compaction policy's call, not an enum branch.
+        self.policy = get_policy(cfg.policy)
         self.device = device or DeviceModel()
         # Scan block accounting happens in the tree (cfg.block_size) while
         # scan service pricing happens here (device.block_size): keep the
@@ -187,7 +191,7 @@ class Simulator:
 
     def _l0_stall(self, region: int, t: float) -> float:
         """Wait until temporal L0 occupancy drops below the stop limit."""
-        stop = self.cfg.l0_stop_ssts
+        stop = self.policy.l0_stop_ssts(self.cfg)
         active = sorted(e[1] for e in self.l0_entries[region]
                         if e[0] <= t and e[1] > t)
         if len(active) < stop:
@@ -201,7 +205,7 @@ class Simulator:
     def _wb_stall(self, region: int, t: float) -> float:
         """Write-buffer stall: previous flush still in flight."""
         unfinished = sorted(f for f in self.flush_inflight[region] if f > t)
-        allowed = self.cfg.max_write_buffers - 1
+        allowed = self.policy.write_buffer_limit(self.cfg) - 1
         if len(unfinished) < allowed:
             return 0.0
         return unfinished[len(unfinished) - allowed] - t

@@ -34,9 +34,17 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import os
 from dataclasses import dataclass, field
 
 import numpy as np
+
+
+def _paranoid_default() -> bool:
+    """Default for ``LSMConfig.paranoid_checks``: the test suite turns it
+    on via ``REPRO_PARANOID_CHECKS=1`` (tests/conftest.py); benchmarks and
+    production paths leave it off."""
+    return os.environ.get("REPRO_PARANOID_CHECKS", "0") == "1"
 
 
 class OpKind(enum.IntEnum):
@@ -159,7 +167,16 @@ class ResultBatch:
 
 
 class Policy(str, enum.Enum):
-    """Compaction-chain policy (the designs of Fig. 3 in the paper)."""
+    """Legacy aliases for the five seed compaction policies (Fig. 3).
+
+    The compaction surface is now the registry-backed strategy layer in
+    :mod:`repro.core.policies`; ``LSMConfig.policy`` carries a plain
+    registry *name* string, and this str-enum survives only for backwards
+    compatibility (its members compare equal to the name strings, so
+    ``cfg.policy == Policy.VLSM`` keeps working).  New policies — e.g. the
+    lazy-leveling ``"lazy"`` policy — register a name without touching
+    this enum.
+    """
 
     VLSM = "vlsm"            # Fig 3(d): no tiering, small SSTs, phi, vSSTs
     ROCKSDB = "rocksdb"      # Fig 3(b): tiering L0 + leveled rest + debt
@@ -217,7 +234,9 @@ class LSMConfig:
     phi: int = 32                       # vLSM growth factor L1 -> L2
     max_levels: int = 5                 # L0..L4
     # --- policy -----------------------------------------------------------
-    policy: Policy = Policy.VLSM
+    # Registry name of the compaction policy (repro.core.policies); legacy
+    # ``Policy`` enum members are accepted and normalized to their value.
+    policy: str = "vlsm"
     debt_factor: float = 0.0            # allowed overflow fraction per level
                                         # (rocksdb: 0.25, adoc: 1.0, *_io: 0)
     adoc_batch: int = 4                 # SSTs per compaction job under ADOC
@@ -231,6 +250,15 @@ class LSMConfig:
     # switch (numpy by default); "jnp" / "pallas" pin this store's manifest
     # queries to the array backends (parity-tested drop-ins).
     index_backend: str | None = None
+    # Run LSMTree.check_invariants() (mechanism + policy invariants) on
+    # every drain_jobs() — continuous validation for CI; leave off in
+    # benchmarks (tests/conftest.py flips the env default on).
+    paranoid_checks: bool = field(default_factory=_paranoid_default)
+
+    def __post_init__(self) -> None:
+        # normalize legacy Policy enum members to their registry name
+        object.__setattr__(self, "policy",
+                           getattr(self.policy, "value", self.policy))
 
     # ----------------------------------------------------------------------
     @property
@@ -251,64 +279,55 @@ class LSMConfig:
     def keys_per_memtable(self) -> int:
         return max(1, self.memtable_size // self.kv_size)
 
+    def compaction_policy(self):
+        """The registry-resolved CompactionPolicy strategy object."""
+        from .policies import get_policy  # lazy: policies import this module
+        return get_policy(self.policy)
+
     @property
     def tiering(self) -> bool:
         """Does L0 use a tiering compaction step (RocksDB-family designs)?"""
-        return self.policy in (Policy.ROCKSDB, Policy.ROCKSDB_IO, Policy.ADOC)
+        return self.compaction_policy().tiering_l0
 
     def level_target(self, level: int) -> int:
-        """Target size in bytes for a leveled level (level >= 1)."""
-        if level < 1:
-            return self.l0_max_ssts * self.memtable_size
-        if self.policy == Policy.VLSM:
-            l1 = self.growth_factor * self.sst_size
-            if level == 1:
-                return l1
-            l2 = self.phi * l1
-            return l2 * self.growth_factor ** (level - 2)
-        # RocksDB-family and LSMi: L1 sized like L0, then geometric.
-        l1 = self.l0_max_ssts * self.memtable_size
-        return l1 * self.growth_factor ** (level - 1)
+        """Target size in bytes for a leveled level (level >= 1) — the
+        policy object owns the sizing rule."""
+        return self.compaction_policy().level_target(self, level)
 
     def level_limit(self, level: int) -> int:
         """Hard limit including compaction debt (overflow)."""
-        return int(self.level_target(level) * (1.0 + self.debt_factor))
+        return self.compaction_policy().level_limit(self, level)
 
     def with_(self, **kw) -> "LSMConfig":
         return dataclasses.replace(self, **kw)
 
     # --- canned configurations -------------------------------------------
+    # Thin delegates to registry["name"].default_config(); kept as the
+    # stable convenience surface.
     @staticmethod
     def rocksdb_default(scale: int = 1 << 20) -> "LSMConfig":
         """RocksDB defaults at a byte `scale` standing in for 64 MB."""
-        return LSMConfig(
-            memtable_size=scale, sst_size=scale, l0_max_ssts=4,
-            policy=Policy.ROCKSDB, debt_factor=0.25, growth_factor=8,
-        )
+        from .policies import get_policy
+        return get_policy("rocksdb").default_config(scale)
 
     @staticmethod
     def rocksdb_io_default(scale: int = 1 << 20) -> "LSMConfig":
-        return LSMConfig.rocksdb_default(scale).with_(
-            policy=Policy.ROCKSDB_IO, debt_factor=0.0)
+        from .policies import get_policy
+        return get_policy("rocksdb_io").default_config(scale)
 
     @staticmethod
     def adoc_default(scale: int = 1 << 20) -> "LSMConfig":
-        return LSMConfig.rocksdb_default(scale).with_(
-            policy=Policy.ADOC, debt_factor=1.0, adoc_batch=4)
+        from .policies import get_policy
+        return get_policy("adoc").default_config(scale)
 
     @staticmethod
     def vlsm_default(scale: int = 1 << 20, sst_frac: int = 8) -> "LSMConfig":
         """vLSM §5 defaults: SSTs S_M = scale/sst_frac (8 MB when scale=64 MB),
         memtable == S_M, L1 = f*S_M, phi = L0_rocksdb_equivalent/L1 ratio 32."""
-        sst = max(1, scale // sst_frac)
-        return LSMConfig(
-            memtable_size=sst, sst_size=sst, l0_max_ssts=4,
-            policy=Policy.VLSM, debt_factor=0.0, growth_factor=8, phi=32,
-        )
+        from .policies import get_policy
+        return get_policy("vlsm").default_config(scale, sst_frac=sst_frac)
 
     @staticmethod
     def lsmi_default(scale: int = 1 << 20) -> "LSMConfig":
-        return LSMConfig(
-            memtable_size=scale, sst_size=scale, l0_max_ssts=4,
-            policy=Policy.LSMI, debt_factor=0.0, growth_factor=8,
-        )
+        from .policies import get_policy
+        return get_policy("lsmi").default_config(scale)

@@ -14,3 +14,7 @@ if str(TESTS) not in sys.path:
     sys.path.insert(0, str(TESTS))
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# Continuous invariant validation: every LSMTree.drain_jobs() in the test
+# suite runs the mechanism + policy invariant sweep (LSMConfig reads this
+# env at construction; benchmarks leave it unset => off).
+os.environ.setdefault("REPRO_PARANOID_CHECKS", "1")

@@ -147,11 +147,9 @@ def test_per_store_index_backend_config():
 
 def test_index_stays_in_lockstep_with_levels():
     """Incremental maintenance (flush, splice, uid-removal) never drifts
-    from the SST lists, across all five policies."""
-    for cfg in (CFG, LSMConfig.rocksdb_default(scale=1 << 16),
-                LSMConfig.adoc_default(scale=1 << 16),
-                LSMConfig.rocksdb_io_default(scale=1 << 16),
-                LSMConfig.lsmi_default(scale=1 << 16)):
+    from the SST lists, across every registered policy."""
+    from repro.core.policies import default_configs
+    for cfg in default_configs(scale=1 << 16).values():
         tree = _build_tree(11, n_ops=3000, cfg=cfg)
         tree.index.check_against(tree.levels)
 

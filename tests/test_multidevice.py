@@ -85,15 +85,13 @@ def test_compressed_psum_wire_and_value():
     """)
 
 
-@pytest.mark.xfail(
-    reason="pre-existing seed failure: jax.Compiled.cost_analysis() returns "
-           "a list (not a dict) on this jax version, so cost.get('flops') "
-           "raises AttributeError inside the subprocess — jax API drift in "
-           "the model-training layer, unrelated to the KV store",
-    strict=False)
 def test_dryrun_microcell_multipod():
     """A tiny end-to-end multi-pod lower+compile (2x2x2 mesh) proving the
-    'pod' axis shards — the 512-dev variant runs via scripts/run_dryruns."""
+    'pod' axis shards — the 512-dev variant runs via scripts/run_dryruns.
+
+    ``Compiled.cost_analysis()`` drifted across jax versions: older
+    releases return ``[{...}]`` (one dict per computation), newer ones the
+    dict itself — normalize before reading flops."""
     _run("""
         import jax, jax.numpy as jnp, functools
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -110,6 +108,8 @@ def test_dryrun_microcell_multipod():
         lowered = jax.jit(step).lower(params, batch)
         compiled = lowered.compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # older jax: list of dicts
+            cost = cost[0] if cost else {}
         assert cost.get("flops", 0) > 0
         print("multipod microcell ok", cost.get("flops"))
     """, n_dev=8)

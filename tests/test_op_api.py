@@ -21,17 +21,16 @@ except ModuleNotFoundError:
     from _propshim import HealthCheck, given, settings, st
 
 from repro.bench_kv.workloads import make_run_e, pareto_keys
+import repro.core.policies
 from repro.core import (DeviceModel, LSMConfig, LSMTree, OpKind, RequestBatch,
                         Simulator)
 from repro.core import level_index
 
 CFG = LSMConfig.vlsm_default(scale=1 << 16)
 
-POLICY_CFGS = (CFG,
-               LSMConfig.rocksdb_default(scale=1 << 16),
-               LSMConfig.adoc_default(scale=1 << 16),
-               LSMConfig.rocksdb_io_default(scale=1 << 16),
-               LSMConfig.lsmi_default(scale=1 << 16))
+# Every registered policy (including newly registered ones) is exercised.
+POLICY_CFGS = tuple(
+    repro.core.policies.default_configs(scale=1 << 16).values())
 
 
 def _grow_tree(seed, n_ops=4000, cfg=CFG, delete_frac=0.15):
@@ -290,8 +289,7 @@ def test_scan_delete_parity_across_index_backends(backend):
             f"{backend} SCAN {field} differs"
 
 
-@pytest.mark.parametrize("cfg", POLICY_CFGS,
-                         ids=lambda c: c.policy.value)
+@pytest.mark.parametrize("cfg", POLICY_CFGS, ids=lambda c: c.policy)
 def test_delete_scan_all_policies(cfg):
     """The typed surface holds up under every compaction policy."""
     tree, kinds, keys = _grow_tree(33, n_ops=2500, cfg=cfg)
