@@ -44,16 +44,27 @@ def main() -> None:
     # db_bench (paper §5: amplification-only, Meta-style population).
     # Policies resolve from the registry: --policy vlsm,lazy or 'all'.
     try:
-        from repro.bench_kv.db_bench import fillrandom
+        from repro.bench_kv.db_bench import chain_report, fill_sim, fillrandom
         from repro.core.policies import get_policy, resolve_names
         from .common import SCALE, emit
         chosen = resolve_names(args.policy)
         for dist in ("uniform", "pareto"):
             for nm in chosen:
                 cfg = get_policy(nm).default_config(scale=SCALE)
-                row = fillrandom(cfg, 60_000, dist=dist, scale=SCALE)
+                run = fill_sim(cfg, 60_000, dist, SCALE)
+                row = fillrandom(cfg, 60_000, dist=dist, scale=SCALE,
+                                 run=run)
                 emit(f"db_bench.{dist}.io_amp.{nm}", row["io_amp"],
                      f"levels={row['levels_filled']}")
+                if dist != "uniform":
+                    continue
+                # chain observatory off the SAME simulation (paper §3;
+                # full distributions live in db_bench's chain_report
+                # rows — see docs/benchmarks.md)
+                crow = chain_report(cfg, 60_000, scale=SCALE, run=run)
+                emit(f"db_bench.chain.mean_width_ssts.{nm}",
+                     crow.get("mean_width_ssts", 0.0),
+                     f"eff_len={crow.get('effective_length', 0.0)}")
     except Exception as e:  # pragma: no cover
         print(f"# db_bench skipped: {e}")
     # serving-integration tail benchmark

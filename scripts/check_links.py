@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker: intra-repo links must resolve.
+
+Scans markdown files for ``[text](target)`` links.  External targets
+(anything with a URL scheme, ``mailto:``, or protocol-relative ``//``)
+are skipped; everything else is resolved relative to the containing file
+and must exist on disk.  ``#anchor`` fragments pointing into a markdown
+file must match one of its headings (GitHub slug rules).  Fenced code
+blocks are ignored so example snippets aren't checked.
+
+Usage (CI runs exactly this):
+
+    python scripts/check_links.py README.md docs
+
+Exits non-zero listing every broken link.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SCHEME_RE = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces -> dashes."""
+    h = heading.strip().lower()
+    h = re.sub(r"[`*_~\[\]()]", "", h)
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def markdown_lines(path: Path):
+    """Lines of ``path`` with fenced code blocks blanked out."""
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            yield ""
+            continue
+        yield "" if in_fence else line
+
+
+def heading_slugs(path: Path) -> set[str]:
+    out: set[str] = set()
+    for line in markdown_lines(path):
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if m:
+            out.add(github_slug(m.group(1)))
+    return out
+
+
+def check_file(md: Path) -> list[str]:
+    errors: list[str] = []
+    text = "\n".join(markdown_lines(md))
+    for target in LINK_RE.findall(text):
+        if SCHEME_RE.match(target) or target.startswith("//"):
+            continue                       # external: not checked offline
+        path_part, _, anchor = target.partition("#")
+        base = md if not path_part else \
+            Path(os.path.normpath(md.parent / path_part))
+        if not base.exists():
+            errors.append(f"{md}: broken link target {target!r}")
+            continue
+        if anchor and base.suffix == ".md":
+            if github_slug(anchor) not in heading_slugs(base):
+                errors.append(f"{md}: anchor {target!r} matches no heading "
+                              f"in {base}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    args = argv or ["README.md", "docs"]
+    files: list[Path] = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"error: no such file or directory: {a}")
+            return 2
+    errors: list[str] = []
+    for md in files:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e)
+    print(f"check_links: {len(files)} files, "
+          f"{'FAIL (' + str(len(errors)) + ' broken)' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

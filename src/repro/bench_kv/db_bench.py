@@ -6,8 +6,11 @@ reports I/O amplification — the paper measures only amplification with
 db_bench, as do we.  ``read_path`` is the read-side companion: a
 read-heavy YCSB-C run that times the DES wall-clock end-to-end, tracking
 the batched LevelIndex GET path.  ``ycsb_a`` measures mixed-workload
-(50% read / 50% update) tails, and ``seekrandom`` scan tails while a
-writer streams.
+(50% read / 50% update) tails, ``seekrandom`` scan tails while a writer
+streams, and ``chain_report`` is the chain observatory — per-policy
+compaction-chain width/length/critical-path distributions on the same
+fillrandom stream (paper §3, Figs 2 & 9).  ``--bench name[,name...]``
+restricts the sweep; row schemas are documented in ``docs/benchmarks.md``.
 
 Policies are resolved from the registry (``repro.core.policies``): every
 registered policy — including ones registered after this file was written
@@ -37,8 +40,14 @@ from .workloads import (load_keys, make_run_a, make_run_c, make_run_e,
                         pareto_keys)
 
 
-def fillrandom(cfg: LSMConfig, n_ops: int, *, dist: str = "uniform",
-               scale: int | None = None, seed: int = 7) -> dict:
+def fill_sim(cfg: LSMConfig, n_ops: int, dist: str = "uniform",
+             scale: int | None = None, seed: int = 7
+             ) -> tuple[Simulator, "object", float]:
+    """Shared fillrandom drive (flood arrivals): returns (sim, res, wall).
+
+    ``fillrandom`` and ``chain_report`` both report off this; pass the
+    triple to either via ``run=`` to derive both rows from ONE simulation
+    instead of running the identical fill twice."""
     scale = scale or cfg.memtable_size
     lam = scale / (64 << 20)
     sim = Simulator(cfg, DeviceModel.scaled(lam))
@@ -47,7 +56,12 @@ def fillrandom(cfg: LSMConfig, n_ops: int, *, dist: str = "uniform",
     arrivals = np.arange(n_ops) / 1e6          # flood: amp-only measurement
     t0 = time.perf_counter()
     res = sim.run(np.zeros(n_ops, np.uint8), keys, arrivals)
-    wall = time.perf_counter() - t0
+    return sim, res, time.perf_counter() - t0
+
+
+def fillrandom(cfg: LSMConfig, n_ops: int, *, dist: str = "uniform",
+               scale: int | None = None, seed: int = 7, run=None) -> dict:
+    sim, res, wall = run or fill_sim(cfg, n_ops, dist, scale, seed)
     st = res.stats
     return {
         "bench": "fillrandom", "dist": dist, "policy": cfg.policy,
@@ -57,6 +71,29 @@ def fillrandom(cfg: LSMConfig, n_ops: int, *, dist: str = "uniform",
         "compactions": sum(st.compactions_per_level.values()),
         "wall_clock_s": round(wall, 3),
     }
+
+
+def chain_report(cfg: LSMConfig, n_ops: int, *, dist: str = "uniform",
+                 scale: int | None = None, seed: int = 7, run=None) -> dict:
+    """Chain observatory (paper §3, Figs 2 & 9): drive fillrandom and
+    report the chain ledger's width/length/critical-path distributions.
+
+    Width is the chain head's L0 fan-in (tiering designs merge all of L0
+    at once — wide; incremental designs pop one SST — narrow, the paper's
+    narrow-chain claim), length the levels a chain traverses, and
+    ``effective_length`` folds in the debt catch-up that debt designs
+    defer into background sweeps.  Critical path is the device wall-clock
+    from the chain's first stage start to its head finish, as scheduled
+    by the chain-aware DES pool; ``stall_attributed_s`` is the foreground
+    write-stop time the DES pinned on each chain."""
+    sim, res, wall = run or fill_sim(cfg, n_ops, dist, scale, seed)
+    row = {
+        "bench": "chain_report", "workload": "fillrandom", "dist": dist,
+        "policy": cfg.policy, "ops": n_ops,
+    }
+    row.update(res.chain_report())
+    row["wall_clock_s"] = round(wall, 3)
+    return row
 
 
 def read_path(cfg: LSMConfig, n_ops: int = 200_000, n_pop: int = 100_000, *,
@@ -216,6 +253,9 @@ def ycsb_a(cfg: LSMConfig, n_ops: int = 60_000, n_pop: int = 60_000, *,
     }
 
 
+BENCHES = ("fillrandom", "read_path", "ycsb_a", "seekrandom", "chain_report")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default="BENCH_dbbench.json",
@@ -225,7 +265,18 @@ def main(argv=None):
     ap.add_argument("--policy", default="all",
                     help="registry policy name(s), comma-separated, or "
                          f"'all' (registered: {', '.join(policy_names())})")
+    ap.add_argument("--bench", default="all",
+                    help="bench name(s), comma-separated, or 'all' "
+                         f"(available: {', '.join(BENCHES)})")
     args = ap.parse_args(argv)
+    if args.bench == "all":
+        benches = set(BENCHES)
+    else:
+        benches = {b.strip() for b in args.bench.split(",")}
+        unknown = benches - set(BENCHES)
+        if unknown:
+            ap.error(f"unknown bench(es) {sorted(unknown)}; "
+                     f"available: {', '.join(BENCHES)}")
     scale = 1 << 18
     n_fill = 12_000 if args.quick else 120_000
     n_read = 20_000 if args.quick else 200_000
@@ -243,26 +294,47 @@ def main(argv=None):
         return get_policy(name).default_config(scale=scale)
 
     rows = []
-    for dist in ("uniform", "pareto"):
+    # The uniform fillrandom runs are shared with chain_report (same cfg /
+    # ops / dist / seed): one simulation feeds both rows.
+    fill_runs: dict[str, tuple] = {}
+    if "fillrandom" in benches:
+        for dist in ("uniform", "pareto"):
+            for name in chosen:
+                cfg = cfg_for(name)
+                run = fill_sim(cfg, n_fill, dist, scale)
+                if dist == "uniform":
+                    fill_runs[name] = (cfg, run)
+                row = fillrandom(cfg, n_fill, dist=dist, scale=scale,
+                                 run=run)
+                rows.append(row)
+                print(f"db_bench.{dist}.{name}: {row}")
+    if "read_path" in benches:
         for name in chosen:
-            row = fillrandom(cfg_for(name), n_fill, dist=dist, scale=scale)
+            row = read_path(cfg_for(name), n_read, n_pop, scale=scale)
             rows.append(row)
-            print(f"db_bench.{dist}.{name}: {row}")
-    for name in chosen:
-        row = read_path(cfg_for(name), n_read, n_pop, scale=scale)
-        rows.append(row)
-        print(f"db_bench.read_path.{name}: {row}")
+            print(f"db_bench.read_path.{name}: {row}")
     # ycsb_a: mixed read/update tails for every policy at the same memory
     # budget (same `scale`) and the same request rate.
-    for name in chosen:
-        row = ycsb_a(cfg_for(name), n_mixed, n_mixed_pop, scale=scale)
-        rows.append(row)
-        print(f"db_bench.ycsb_a.{name}: {row}")
+    if "ycsb_a" in benches:
+        for name in chosen:
+            row = ycsb_a(cfg_for(name), n_mixed, n_mixed_pop, scale=scale)
+            rows.append(row)
+            print(f"db_bench.ycsb_a.{name}: {row}")
     # seekrandom / YCSB-E: scan tails for every policy.
-    for name in chosen:
-        row = seekrandom(cfg_for(name), n_scan, n_scan_pop, scale=scale)
-        rows.append(row)
-        print(f"db_bench.seekrandom.{name}: {row}")
+    if "seekrandom" in benches:
+        for name in chosen:
+            row = seekrandom(cfg_for(name), n_scan, n_scan_pop, scale=scale)
+            rows.append(row)
+            print(f"db_bench.seekrandom.{name}: {row}")
+    # chain_report: the chain observatory — width/length/critical-path
+    # distributions per policy on the same fillrandom stream (the paper's
+    # narrow-chain claim: vlsm mean width strictly below rocksdb's).
+    if "chain_report" in benches:
+        for name in chosen:
+            cfg, run = fill_runs.get(name) or (cfg_for(name), None)
+            row = chain_report(cfg, n_fill, scale=scale, run=run)
+            rows.append(row)
+            print(f"db_bench.chain_report.{name}: {row}")
     if args.json:
         Path(args.json).write_text(json.dumps(rows, indent=1))
         print(f"wrote {args.json} ({len(rows)} rows)")

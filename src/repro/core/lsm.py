@@ -36,11 +36,22 @@ from .types import (LSMConfig, OpKind, RequestBatch, ResultBatch,
                     seq_decode, seq_encode)
 
 _job_ids = itertools.count()
+# Chain ids are module-global (not per-tree): a Simulator shares one Stats
+# ledger across regions, so chain identity must be unique across trees.
+_chain_ids = itertools.count()
 
 
 @dataclass
 class Job:
-    """A unit of background device work, scheduled by the DES."""
+    """A unit of background device work, scheduled by the DES.
+
+    Every job carries its *chain identity*: ``chain_id`` names the
+    compaction chain (or, for flushes, a fresh singleton id) and
+    ``parent_job`` is the intra-chain predecessor this job's start must
+    wait for (``None`` for the chain's deepest stage).  The DES respects
+    the edge via ``parent_job.t_finish``; paranoid mode validates the
+    lineage (acyclic, child starts >= parent finish).
+    """
 
     kind: str                    # "flush" | "compact"
     level: int                   # source level (-1 for memtable flush)
@@ -51,6 +62,8 @@ class Job:
     deps: list["Job"] = field(default_factory=list)
     uid: int = field(default_factory=lambda: next(_job_ids))
     l0_consumed: int = 0         # L0 SSTs this job removed (for the DES)
+    chain_id: int = -1           # the chain this job belongs to
+    parent_job: "Job | None" = None  # intra-chain predecessor (dep edge)
     # filled by the DES:
     t_start: float = 0.0
     t_finish: float = 0.0
@@ -81,6 +94,8 @@ class LSMTree:
         self.index = LevelIndex(cfg.max_levels, backend=cfg.index_backend)
         self.seq = 0
         self.pending_jobs: list[Job] = []
+        # chain id the current compaction pass stamps onto emitted jobs
+        self._active_chain = -1
 
     # --------------------------------------------------- typed entry point
     def apply_batch(self, batch: RequestBatch) -> ResultBatch:
@@ -175,8 +190,12 @@ class LSMTree:
             blocking = [chain_jobs[-1]]  # chain head: the L0 compaction
         mt = self.immutables.pop(0)
         sst = mt.to_sst()
+        # A flush is its own singleton chain: the dep on a compaction
+        # chain's head (when L0 hit the stop limit) is cross-chain
+        # back-pressure, not chain lineage, so parent_job stays None.
         if sst.n == 0:
-            job = Job("flush", -1, 0, 0, 0, 0, deps=blocking)
+            job = Job("flush", -1, 0, 0, 0, 0, deps=blocking,
+                      chain_id=next(_chain_ids))
             self.pending_jobs.append(job)
             return job, chain_jobs
         self.levels[0].append(sst)
@@ -184,7 +203,8 @@ class LSMTree:
         self.stats.flush_bytes += sst.size
         self.stats.ssts_created += 1
         self.stats.manifest_flushes += 1
-        job = Job("flush", -1, 0, sst.size, 0, 1, deps=blocking)
+        job = Job("flush", -1, 0, sst.size, 0, 1, deps=blocking,
+                  chain_id=next(_chain_ids))
         self.pending_jobs.append(job)
         return job, chain_jobs
 
@@ -205,17 +225,64 @@ class LSMTree:
         """
         all_jobs: list[Job] = []
         while len(self.levels[0]) >= self.cfg.l0_max_ssts:
-            jobs, stage_bytes = self._compact_from(0)
+            jobs, _stage_bytes = self._chain_pass(0, trigger="l0")
             if not jobs:
                 break
-            levels_touched = {j.level for j in jobs}
-            self.stats.chains.append(ChainRecord(
-                length=len(levels_touched),
-                width_bytes=sum(j.total_bytes for j in jobs),
-                stage_bytes=stage_bytes,
-            ))
             all_jobs.extend(jobs)
         return all_jobs
+
+    def _chain_pass(self, level: int, trigger: str
+                    ) -> tuple[list[Job], list[int]]:
+        """Run ONE compaction pass from ``level`` as a first-class chain:
+        allocate a chain id, stamp it on every job the pass emits, and
+        ledger a :class:`ChainRecord` (width = head fan-in, length =
+        distinct levels traversed, per-stage bytes).  The chain *head* is
+        the final job of the pass — the one that relieves the trigger."""
+        cid = next(_chain_ids)
+        prev, self._active_chain = self._active_chain, cid
+        try:
+            jobs, stage_bytes = self._compact_from(level)
+        finally:
+            self._active_chain = prev
+        if jobs:
+            head = jobs[-1]
+            # Paper width = the head's L0 fan-in (tiering merges all of
+            # L0 at once, incremental pops one SST); background sweeps
+            # have no L0 stage, so their head's total input fan-in stands.
+            rec = self.stats.record_chain(ChainRecord(
+                chain_id=cid, trigger=trigger,
+                length=len({j.level for j in jobs}),
+                width=head.l0_consumed or head.n_in_ssts,
+                width_bytes=sum(j.total_bytes for j in jobs),
+                stage_bytes=stage_bytes,
+                n_jobs=len(jobs),
+                job_uids=[j.uid for j in jobs],
+            ))
+            if self.cfg.paranoid_checks:
+                self._check_chain(jobs, rec)
+        return jobs, stage_bytes
+
+    def _check_chain(self, jobs: list[Job], rec: ChainRecord) -> None:
+        """Chain invariants at emission time: every job stamped with the
+        record's id, parent lineage acyclic and contained in the chain,
+        width >= 1, and width/length consistent with the job topology."""
+        uids = {j.uid for j in jobs}
+        head = jobs[-1]
+        assert rec.width >= 1, "chain head must consume at least one SST"
+        assert rec.length == len({j.level for j in jobs}), \
+            "chain length must match the job topology"
+        assert rec.width == (head.l0_consumed or head.n_in_ssts), \
+            "chain width must be the head stage's L0 fan-in"
+        for j in jobs:
+            assert j.chain_id == rec.chain_id, "job missing its chain stamp"
+            visited = {j.uid}
+            p = j.parent_job
+            while p is not None:
+                assert p.uid not in visited, "cycle in chain parent lineage"
+                assert p.uid in uids, "chain parent crosses chain boundary"
+                visited.add(p.uid)
+                assert len(visited) <= len(jobs)
+                p = p.parent_job
 
     def _compact_from(self, level: int) -> tuple[list[Job], list[int]]:
         """Compact from ``level`` into ``level+1``, first ensuring space
@@ -352,7 +419,9 @@ class LSMTree:
         self.stats.ssts_created += n_out
         self.stats.manifest_flushes += 1
         self.stats.note_compaction(level, read_b + write_b)
-        job = Job("compact", level, read_b, write_b, n_in, n_out, deps=deps)
+        job = Job("compact", level, read_b, write_b, n_in, n_out, deps=deps,
+                  chain_id=self._active_chain,
+                  parent_job=deps[0] if deps else None)
         self.pending_jobs.append(job)
         return job
 
@@ -373,7 +442,7 @@ class LSMTree:
             while (total_size(self.levels[level])
                    > soft * self.policy.level_target(cfg, level)
                    and guard < 64):
-                sub, _sb = self._compact_from(level)
+                sub, _sb = self._chain_pass(level, trigger="background")
                 if not sub:
                     break
                 jobs.extend(sub)

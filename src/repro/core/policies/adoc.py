@@ -2,7 +2,12 @@
 background compactions — the scheduling approach.  Levels intentionally run
 *past* target (debt, §3.3) and only compact in big batches once they exceed
 1.5x target: that is the mechanism by which ADOC trades I/O amplification
-(larger overlaps while overfull) for fewer stalls."""
+(larger overlaps while overfull) for fewer stalls.
+
+Chain shape: the tiering head is as wide as RocksDB's, but the debt
+batching shifts work into *background* chains (soft-limit sweeps) that the
+chain-aware DES pool runs at lower urgency than L0 relief — ADOC's
+scheduling idea expressed as chain priority."""
 
 from __future__ import annotations
 

@@ -19,6 +19,9 @@ A policy owns:
 * **stall / debt parameters** — :attr:`soft_limit_factor`,
   :meth:`level_target` / :meth:`level_limit`, and the DES stall gates
   :meth:`l0_stop_ssts` / :meth:`write_buffer_limit`;
+* **chain scheduling urgency** — :meth:`chain_priority`, the sort key the
+  DES's chain-aware compaction pool orders drained chains by (vLSM and
+  lazy override it; see ``docs/architecture.md``);
 * **config defaults** — :meth:`default_config`, the policy's canned
   ``LSMConfig`` (what ``LSMConfig.rocksdb_default`` et al. delegate to);
 * **policy-specific invariants** — :meth:`check_invariants`, run by the
@@ -45,7 +48,23 @@ if TYPE_CHECKING:  # mechanism types, imported lazily to avoid a cycle
 
 
 class CompactionPolicy:
-    """Strategy base class: every hook has the RocksDB-leveled default."""
+    """Strategy base class: every hook has the RocksDB-leveled default.
+
+    Hook contract, common to all of them:
+
+    * Hooks receive the live ``LSMTree`` (or its frozen ``LSMConfig``) —
+      they may *read* anything, but must mutate structure **only**
+      through the mechanism primitives (``tree.merge_down``,
+      ``tree.merge_runs``, ``tree.overlap``, ``tree.replace_in_level``,
+      ``tree.strip_bottom_tombstones``, ``tree.emit_compact_job``).
+      Never touch ``tree.levels`` / ``tree.index`` except via L0
+      ownership inside the two shared L0 bodies.
+    * ``cfg`` is a frozen dataclass: never mutated, derive with
+      ``cfg.with_(...)``.
+    * Pure *parameter* hooks (``level_target``, ``l0_stop_ssts``, ...)
+      must be deterministic functions of their inputs — the DES calls
+      them repeatedly and assumes stable answers.
+    """
 
     #: registry key; also the value carried in ``LSMConfig.policy``
     name: str = ""
@@ -58,38 +77,76 @@ class CompactionPolicy:
     # ------------------------------------------------------ configuration
     def default_config(self, scale: int = 1 << 20, **kw) -> LSMConfig:
         """The policy's canned ``LSMConfig`` at a byte ``scale`` standing
-        in for the paper's 64 MB."""
+        in for the paper's 64 MB.
+
+        Contract: must return a config whose ``policy`` field round-trips
+        (``cfg.policy == self.name``) so registry resolution is stable.
+        Required override — the base class has no sensible default shape.
+        """
         raise NotImplementedError
 
     def level_target(self, cfg: LSMConfig, level: int) -> int:
-        """Target size in bytes for ``level`` (L0 target is the trigger
-        occupancy).  Default: L1 sized like L0, then geometric growth."""
+        """Target size in bytes for ``level`` (the L0 target is the
+        trigger occupancy in bytes).
+
+        Inputs: the frozen config and a level index ``0 <= level <
+        cfg.max_levels``.  Must be pure (no tree access — targets are
+        queried before trees exist).  Default: L1 sized like L0, then
+        geometric ``growth_factor`` scaling."""
         if level < 1:
             return cfg.l0_max_ssts * cfg.memtable_size
         l1 = cfg.l0_max_ssts * cfg.memtable_size
         return l1 * cfg.growth_factor ** (level - 1)
 
     def level_limit(self, cfg: LSMConfig, level: int) -> int:
-        """Hard limit including compaction debt (overflow)."""
+        """Hard size limit for ``level`` including compaction debt
+        (overflow): the room-making recursion compacts a level before
+        letting incoming bytes push it past this.  Default:
+        ``level_target * (1 + cfg.debt_factor)``."""
         return int(self.level_target(cfg, level) * (1.0 + cfg.debt_factor))
 
     # --------------------------------------------------- DES stall gates
     def l0_stop_ssts(self, cfg: LSMConfig) -> int:
-        """Temporal L0 occupancy at which the DES write-stops the queue."""
+        """Temporal L0 occupancy (file count) at which the DES
+        write-stops the foreground queue (RocksDB's level0_stop gate).
+        Pure function of the config.  Default: ``cfg.l0_stop_ssts``."""
         return cfg.l0_stop_ssts
 
     def write_buffer_limit(self, cfg: LSMConfig) -> int:
-        """Write buffers (active + immutable) before a write-buffer stall."""
+        """Write buffers (active + immutable) a region may hold before a
+        fill stalls on the in-flight flush (RocksDB's
+        max_write_buffer_number).  Default: ``cfg.max_write_buffers``."""
         return cfg.max_write_buffers
+
+    # ---------------------------------------------------- DES scheduling
+    def chain_priority(self, cfg: LSMConfig, head: "Job",
+                       chain_jobs: list["Job"]):
+        """Urgency sort key for one compaction *chain* in the DES's
+        chain-aware compaction pool (``ChainScheduler``).
+
+        Inputs: the frozen config, the chain ``head`` (the job that
+        relieves the trigger — the L0 stage of a flush-triggered chain),
+        and the chain's jobs in emission order (deepest stage first,
+        head last).  Returns any sortable key; **lower schedules
+        earlier**, ties keep FIFO emission order.  Must not mutate the
+        jobs — scheduling has not happened yet (``t_start``/``t_finish``
+        are unset).
+
+        Default (RocksDB low-pri semantics): chains containing an
+        L0-source stage outrank background soft-limit sweeps."""
+        return (0 if any(j.level == 0 for j in chain_jobs) else 1, 0)
 
     # ------------------------------------------------ structural strategy
     def pick_batch(self, cfg: LSMConfig) -> int:
-        """SSTs picked per L1+ compaction job (ADOC batches several)."""
+        """SSTs picked per L1+ compaction job (ADOC batches several).
+        Pure function of the config; must be >= 1.  Default: 1."""
         return 1
 
     def incoming_bytes(self, tree: "LSMTree", level: int) -> int:
         """Bytes one compaction from ``level`` pushes into ``level + 1`` —
-        what the chain's room-making recursion must clear below."""
+        what the chain's room-making recursion must clear below.
+        Read-only on the tree.  Default: the whole of L0 for tiering
+        designs, one SST otherwise."""
         cfg = tree.cfg
         if level == 0:
             if self.tiering_l0:
@@ -98,16 +155,27 @@ class CompactionPolicy:
         return cfg.sst_size
 
     def compact_l0(self, tree: "LSMTree", deps: list["Job"]) -> "Job | None":
-        """One L0 compaction pass (L0 is at its trigger)."""
+        """One L0 compaction pass (called when L0 is at its trigger).
+
+        ``deps`` is the chain's dependency tail (the deeper job this
+        stage must follow) and must be forwarded verbatim to
+        ``emit_compact_job`` so chain lineage stays intact.  Returns the
+        emitted head job, or ``None`` when there is nothing to do.
+        Default: dispatch to the shared tiering/incremental body per
+        :attr:`tiering_l0`."""
         if self.tiering_l0:
             return self._tiering_l0(tree, deps)
         return self._incremental_l0(tree, deps)
 
     def pick_compaction(self, tree: "LSMTree", level: int,
                         deps: list["Job"]) -> "Job | None":
-        """Compact from ``level >= 1`` into ``level + 1``.  Default:
-        RocksDB's scheduler — min overlap-ratio SST(s) first, scored with
-        one batched LevelIndex fence query."""
+        """Compact from ``level >= 1`` into ``level + 1``.
+
+        Same ``deps`` forwarding contract as :meth:`compact_l0`; all
+        mutation must go through ``tree.merge_down`` (or the other
+        primitives).  Default: RocksDB's scheduler — the min
+        overlap-ratio SST(s) first, scored with one batched LevelIndex
+        fence query."""
         if not tree.levels[level]:
             return None
         scores = (tree.index.overlap_bytes(level, level + 1)
@@ -119,13 +187,21 @@ class CompactionPolicy:
     def build_l1_ssts(self, tree: "LSMTree", keys: np.ndarray,
                       seqs: np.ndarray) -> list:
         """Cut an L0->L1 merged stream into L1 SSTs (the sizing hook).
-        Default: fixed-size SSTs; vLSM builds overlap-aware vSSTs."""
+
+        ``keys``/``seqs`` are the merged, tombstone-stripped stream; the
+        hook must partition them into SSTs **without reordering or
+        dropping entries** (the caller splices the result into L1 and
+        accounts the bytes).  May read ``tree.index`` fences (vLSM scores
+        L2 overlap) but must not mutate the tree.  Default: fixed-size
+        ``split_fixed`` cuts; vLSM builds overlap-aware vSSTs."""
         cfg = tree.cfg
         return split_fixed(keys, seqs, cfg.kv_size, cfg.sst_size)
 
     def check_invariants(self, tree: "LSMTree") -> None:
-        """Policy-specific structural invariants (on top of the mechanism's
-        sortedness/disjointness/index checks).  Default: none."""
+        """Policy-specific structural invariants, run by the mechanism's
+        own sweep after its sortedness/disjointness/index/chain checks —
+        continuously when ``cfg.paranoid_checks`` is on.  Read-only;
+        raise ``AssertionError`` on violation.  Default: none."""
 
     # ------------------------------------- shared L0 strategy bodies
     def _tiering_l0(self, tree: "LSMTree", deps: list["Job"]) -> "Job | None":

@@ -67,6 +67,18 @@ class LazyLevelingPolicy(CompactionPolicy):
         # greedy at the bottom: leveled min-overlap single-SST pick
         return super().pick_compaction(tree, level, deps)
 
+    def chain_priority(self, cfg: LSMConfig, head: "Job",
+                       chain_jobs: list["Job"]):
+        """Lazy chain urgency: L0 relief first, bottom-level greedy picks
+        next, and the wholesale intermediate moves — the *lazy* work this
+        policy exists to defer — last.  They are huge and nothing
+        foreground waits on them, so they soak up whatever slot time the
+        urgent chains leave."""
+        if any(j.level == 0 for j in chain_jobs):
+            return (0, 0)
+        wholesale = 1 <= head.level < cfg.max_levels - 2
+        return (2, 0) if wholesale else (1, 0)
+
     def check_invariants(self, tree: "LSMTree") -> None:
         # all on-device SSTs are fixed-size cuts: never beyond S_M (+1 key)
         cfg = tree.cfg

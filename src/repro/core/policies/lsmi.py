@@ -1,6 +1,10 @@
 """LSMi (paper Fig 3a): incremental compaction without L0 tiering and
 fixed-size L1 SSTs — one L0 SST at a time, but every compaction rewrites
-the whole overlap."""
+the whole overlap.
+
+Chain shape: the incremental head keeps chains *narrow* (fan-in = 1 L0
+SST + its L1 overlap), but without vLSM's phi/vSSTs the chains run long —
+each pop cascades through more levels before the trigger clears."""
 
 from __future__ import annotations
 

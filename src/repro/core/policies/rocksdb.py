@@ -1,7 +1,13 @@
 """RocksDB-family baselines (paper Fig 3b): tiering compaction in L0 —
 when L0 fills, ALL L0 SSTs merge with ALL overlapping L1 SSTs (the wide
 first chain stage) — then leveled min-overlap picks below.  ``rocksdb``
-allows bounded compaction debt; ``rocksdb_io`` none (overflow disabled)."""
+allows bounded compaction debt; ``rocksdb_io`` none (overflow disabled).
+
+Chain shape (§3, the paper's tail-latency diagnosis): the tiering head
+makes every flush-triggered chain *wide* — its fan-in is the whole of L0
+plus the L1 overlap — so a stalled queue waits on a large, monolithic
+merge.  Chain urgency stays the base default (L0-relieving chains before
+background sweeps, RocksDB's own low-pri boost)."""
 
 from __future__ import annotations
 

@@ -88,6 +88,16 @@ class VLSMPolicy(CompactionPolicy):
             picked = [int(np.argmin(ratios))]
         return tree.merge_down(1, picked, deps)
 
+    def chain_priority(self, cfg: LSMConfig, head: "Job",
+                       chain_jobs: list["Job"]):
+        """vLSM chain urgency: L0-pressure chains first, and among equals
+        the *narrowest* chain (fewest total bytes) first — with many small
+        incremental chains in flight, clearing the cheapest L0 slot
+        soonest is what keeps the write-stop gate open (§4.1's narrow
+        chains are the asset; schedule them like one)."""
+        tier = 0 if any(j.level == 0 for j in chain_jobs) else 1
+        return (tier, sum(j.total_bytes for j in chain_jobs))
+
     def check_invariants(self, tree: "LSMTree") -> None:
         for sst in tree.levels[1]:
             # S_M plus the tail-absorption slack: a trailing fragment

@@ -88,6 +88,11 @@ class SimResult:
     def throughput(self) -> float:
         return self.arrivals.shape[0] / max(self.makespan, 1e-9)
 
+    def chain_report(self) -> dict:
+        """Chain observatory: width/length/critical-path distributions of
+        the run's compaction chains (``Stats.chain_report``)."""
+        return self.stats.chain_report() if self.stats is not None else {}
+
     def completions_timeline(self, bins: int = 100) -> tuple[np.ndarray, np.ndarray]:
         done = self.arrivals + self.latency
         hist, edges = np.histogram(done, bins=bins)
@@ -136,6 +141,41 @@ class SlotPool:
         self.level_free[lkey] = job.t_finish
 
 
+class ChainScheduler(SlotPool):
+    """Chain-aware priority scheduler for the compaction pool.
+
+    A drained batch of compaction jobs is grouped by ``chain_id`` and the
+    chains are ordered by head urgency before slot assignment: chains
+    whose head relieves L0 pressure go first (RocksDB's low-pri pool
+    boosts L0->L1 work for exactly this reason), background soft-limit
+    sweeps last; the policy object's ``chain_priority`` hook supplies the
+    sort key.  Independent chains still run concurrently — priority only
+    decides who gets the earliest free slot — while intra-chain
+    dependency edges stay serialized via ``parent_job.t_finish`` (parents
+    are always scheduled before their children because emission order
+    within a chain is dependency order).
+    """
+
+    def schedule_batch(self, jobs_durs: list[tuple[Job, float]],
+                       ready: float, region: int, priority_fn) -> None:
+        """Schedule one drained batch.  ``priority_fn(chain_jobs)`` maps a
+        chain's jobs (emission order, head last) to a sortable urgency key
+        — lower schedules earlier; ties keep emission (FIFO) order."""
+        order: list[int] = []
+        groups: dict[int, list[tuple[Job, float]]] = {}
+        for job, dur in jobs_durs:
+            if job.chain_id not in groups:
+                groups[job.chain_id] = []
+                order.append(job.chain_id)
+            groups[job.chain_id].append((job, dur))
+        ranked = sorted(order,
+                        key=lambda cid: priority_fn([j for j, _ in
+                                                     groups[cid]]))
+        for cid in ranked:
+            for job, dur in groups[cid]:
+                self.schedule(job, ready, dur, region)
+
+
 class Simulator:
     def __init__(self, cfg: LSMConfig, device: DeviceModel | None = None,
                  n_regions: int = 1):
@@ -155,9 +195,12 @@ class Simulator:
         # Dedicated flush slot + shared compaction slots (RocksDB's
         # high-priority flush pool vs low-priority compaction pool).
         self.flush_pool = SlotPool(1)
-        self.compact_pool = SlotPool(max(1, self.device.compaction_slots - 1))
-        # temporal L0 occupancy per region: (appear_t, clears_at) lists
-        self.l0_entries: list[list[list[float]]] = [[] for _ in range(n_regions)]
+        self.compact_pool = ChainScheduler(
+            max(1, self.device.compaction_slots - 1))
+        # temporal L0 occupancy per region: [appear_t, clears_at,
+        # clearing_chain_id] entries (chain_id -1 until consumed — used to
+        # attribute write-stop stall time to the chain that clears it)
+        self.l0_entries: list[list[list]] = [[] for _ in range(n_regions)]
         self.flush_inflight: list[list[float]] = [[] for _ in range(n_regions)]
         self.job_log: list[Job] = []
         self.stall_events: list[tuple[int, float]] = []  # (op_idx, duration)
@@ -168,39 +211,78 @@ class Simulator:
         return (d.read_time(job.bytes_read, max(1, job.n_in_ssts))
                 + d.write_time(job.bytes_written, max(1, job.n_out_ssts)))
 
+    def _chain_key(self, chain_jobs: list[Job]):
+        """Priority key for one chain (emission order, head last) — the
+        policy object's ``chain_priority`` hook, fed the chain head."""
+        return self.policy.chain_priority(self.cfg, chain_jobs[-1],
+                                          chain_jobs)
+
     def _schedule_drained(self, tree: LSMTree, region: int, t: float) -> None:
-        for job in tree.drain_jobs():
-            dur = self._job_duration(job)
-            if job.kind == "flush":
-                self.flush_pool.schedule(job, t, dur, region)
-                self.flush_inflight[region].append(job.t_finish)
-                if job.bytes_written > 0:
-                    # SST appears in L0 when the flush lands.
-                    self.l0_entries[region].append([job.t_finish, np.inf])
+        drained = tree.drain_jobs()
+        # Compactions first (priority-ordered by chain urgency), then
+        # flushes: a flush's only dep is a compaction chain head, so its
+        # dep is always scheduled by the time the flush pool sees it.
+        compacts = [(j, self._job_duration(j)) for j in drained
+                    if j.kind == "compact"]
+        if compacts:
+            if self.cfg.chain_aware_sched:
+                self.compact_pool.schedule_batch(compacts, t, region,
+                                                 self._chain_key)
             else:
-                self.compact_pool.schedule(job, t, dur, region)
+                for job, dur in compacts:     # legacy FIFO drain order
+                    self.compact_pool.schedule(job, t, dur, region)
+            for job, _dur in compacts:        # emission order, like drain
                 if job.level == 0 and job.l0_consumed:
-                    self._consume_l0(region, job.l0_consumed, job.t_finish)
+                    self._consume_l0(region, job.l0_consumed, job.t_finish,
+                                     job.chain_id)
+                self._note_scheduled(job)
+                self.job_log.append(job)
+        for job in drained:
+            if job.kind != "flush":
+                continue
+            self.flush_pool.schedule(job, t, self._job_duration(job), region)
+            self.flush_inflight[region].append(job.t_finish)
+            if job.bytes_written > 0:
+                # SST appears in L0 when the flush lands.
+                self.l0_entries[region].append([job.t_finish, np.inf, -1])
             self.job_log.append(job)
 
-    def _consume_l0(self, region: int, k: int, clears_at: float) -> None:
+    def _note_scheduled(self, job: Job) -> None:
+        """Fill the chain ledger's temporal fields and (paranoid) validate
+        the intra-chain dependency edge the scheduler just honoured."""
+        rec = self.stats.chain_index.get(job.chain_id)
+        if rec is not None:
+            rec.t_start = min(rec.t_start, job.t_start)
+            rec.t_finish = max(rec.t_finish, job.t_finish)
+        if self.cfg.paranoid_checks and job.parent_job is not None:
+            assert job.t_start >= job.parent_job.t_finish - 1e-9, \
+                "chain child scheduled before its parent finished"
+
+    def _consume_l0(self, region: int, k: int, clears_at: float,
+                    chain_id: int = -1) -> None:
         pending = [e for e in self.l0_entries[region] if e[1] == np.inf]
         pending.sort(key=lambda e: e[0])
         for e in pending[:k]:
             e[1] = clears_at
+            e[2] = chain_id
 
-    def _l0_stall(self, region: int, t: float) -> float:
-        """Wait until temporal L0 occupancy drops below the stop limit."""
+    def _l0_stall(self, region: int, t: float) -> tuple[float, int]:
+        """Wait until temporal L0 occupancy drops below the stop limit.
+        Returns ``(stall, chain_id)`` — the chain whose head clears the
+        slot the queue waits for (-1 when unknown); the caller attributes
+        the stall to that chain only when the L0 wait is the binding
+        component of the fill event's delay."""
         stop = self.policy.l0_stop_ssts(self.cfg)
-        active = sorted(e[1] for e in self.l0_entries[region]
+        active = sorted((e[1], e[2]) for e in self.l0_entries[region]
                         if e[0] <= t and e[1] > t)
         if len(active) < stop:
-            return 0.0
+            return 0.0, -1
         k = len(active) - stop  # waiting for the (k+1)-th clear
-        target = active[k]
+        target, cid = active[k]
         if not np.isfinite(target):
             target = max(self.compact_pool.free_at)
-        return max(0.0, target - t)
+            cid = -1
+        return max(0.0, target - t), int(cid)
 
     def _wb_stall(self, region: int, t: float) -> float:
         """Write-buffer stall: previous flush still in flight."""
@@ -272,7 +354,14 @@ class Simulator:
             bg = tree.background_triggers()
             if bg:
                 self._schedule_drained(tree, region, t)
-            stall = max(stall, self._l0_stall(region, t))
+            l0_stall, cid = self._l0_stall(region, t)
+            if l0_stall > stall and cid >= 0:
+                # the L0 wait is the binding delay: pin it on the chain
+                # whose head clears the awaited slot
+                rec = self.stats.chain_index.get(cid)
+                if rec is not None:
+                    rec.stall_s += l0_stall
+            stall = max(stall, l0_stall)
             if stall > 0:
                 service[op_i] += stall
                 D += stall

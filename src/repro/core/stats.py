@@ -12,16 +12,51 @@ Every quantity the paper plots is derived from these counters:
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
+
+import numpy as np
 
 
 @dataclass
 class ChainRecord:
-    """One compaction chain triggered to free space for L0/memtable."""
+    """One first-class compaction chain: the cascade of dependent
+    compaction :class:`~repro.core.lsm.Job` records triggered to free
+    space for L0/memtable (``trigger="l0"``) or by the soft over-target
+    sweep (``trigger="background"``).
 
-    length: int            # number of level-to-level stages
-    width_bytes: int       # total bytes read+written across the chain
+    The structural fields are filled by ``LSMTree`` when the chain is
+    emitted; the temporal fields (``t_start``/``t_finish``/``stall_s``)
+    are filled by the DES scheduler once the chain's jobs get device
+    time.  Paper semantics (§3): *width* is the head stage's input
+    fan-in — L0 tiering merges ALL L0 SSTs plus the L1 overlap into one
+    wide head, incremental designs pop a single SST — and *length* is
+    the number of levels the chain traverses before the trigger clears.
+    """
+
+    chain_id: int = -1
+    trigger: str = "l0"    # "l0" (flush-triggered) | "background"
+    length: int = 0        # number of level-to-level stages (distinct levels)
+    width: int = 0         # head fan-in: L0 SSTs the head consumed (the
+                           # paper's tiering fan-in; background chains fall
+                           # back to the head's total input SST count)
+    width_bytes: int = 0   # total bytes read+written across the chain
     stage_bytes: list[int] = field(default_factory=list)
+    n_jobs: int = 0
+    job_uids: list[int] = field(default_factory=list)
+    # filled by the DES scheduler:
+    t_start: float = math.inf   # earliest job start on the device
+    t_finish: float = 0.0       # latest job finish (the chain clears here)
+    stall_s: float = 0.0        # foreground stall attributed to this chain
+
+    @property
+    def critical_path_s(self) -> float:
+        """Wall-clock the chain occupied end-to-end on the device: the
+        dependency edges serialize the stages, so this is the span from
+        the first stage's start to the head's finish (0 if unscheduled)."""
+        if not math.isfinite(self.t_start) or self.t_finish <= self.t_start:
+            return 0.0
+        return self.t_finish - self.t_start
 
 
 # CPU-cycle proxy coefficients (constant across all policies, so ratios are
@@ -54,8 +89,10 @@ class Stats:
     scan_ops: int = 0
     tombstones_dropped: int = 0      # markers reclaimed at the bottom level
     tombstone_bytes_dropped: int = 0
-    # structural records
+    # structural records: the chain ledger (ALL chains, l0 + background;
+    # chain_index is the DES's O(1) chain_id -> record lookup)
     chains: list[ChainRecord] = field(default_factory=list)
+    chain_index: dict[int, ChainRecord] = field(default_factory=dict)
     vssts_good: int = 0
     vssts_poor: int = 0
     vsst_good_bytes: int = 0
@@ -96,21 +133,97 @@ class Stats:
         pressure: written but not yet reclaimed at the bottom level)."""
         return max(0, self.delete_ops - self.tombstones_dropped)
 
+    # --------------------------------------------------- the chain ledger
+    def record_chain(self, rec: ChainRecord) -> ChainRecord:
+        """Append a chain to the ledger and index it for the DES."""
+        self.chains.append(rec)
+        self.chain_index[rec.chain_id] = rec
+        return rec
+
+    @property
+    def l0_chains(self) -> list[ChainRecord]:
+        """Flush-triggered chains only — the paper's Figs 2 & 9 population
+        (background soft-limit sweeps are ledgered but reported apart)."""
+        return [c for c in self.chains if c.trigger == "l0"]
+
     @property
     def mean_chain_width(self) -> float:
-        if not self.chains:
+        chains = self.l0_chains
+        if not chains:
             return 0.0
-        return sum(c.width_bytes for c in self.chains) / len(self.chains)
+        return sum(c.width_bytes for c in chains) / len(chains)
 
     @property
     def max_chain_width(self) -> int:
-        return max((c.width_bytes for c in self.chains), default=0)
+        return max((c.width_bytes for c in self.l0_chains), default=0)
 
     @property
     def mean_chain_length(self) -> float:
-        if not self.chains:
+        chains = self.l0_chains
+        if not chains:
             return 0.0
-        return sum(c.length for c in self.chains) / len(self.chains)
+        return sum(c.length for c in chains) / len(chains)
+
+    @property
+    def mean_chain_fanin(self) -> float:
+        """Mean head-stage L0 fan-in over flush-triggered chains — the
+        paper's chain *width* in file terms (tiering ~= l0_max_ssts,
+        incremental = 1)."""
+        chains = self.l0_chains
+        if not chains:
+            return 0.0
+        return sum(c.width for c in chains) / len(chains)
+
+    @property
+    def effective_chain_length(self) -> float:
+        """Compaction stages each L0 relief *forces*, counting the debt
+        catch-up that debt designs defer into background sweeps: total
+        stages across the whole ledger over the number of flush-triggered
+        chains.  For no-debt policies this equals the raw mean length;
+        for debt designs it surfaces the deferred part of the cascade —
+        the paper's chain *length* on an equal footing across policies."""
+        n_l0 = len(self.l0_chains)
+        if n_l0 == 0:
+            return 0.0
+        return sum(c.length for c in self.chains) / n_l0
+
+    def chain_report(self) -> dict:
+        """Distribution summary of the chain ledger (the chain observatory).
+
+        Width (head fan-in, SSTs), length (levels traversed), and
+        critical-path duration P50/P99 over flush-triggered chains, plus
+        the background-chain count and the total foreground stall time
+        the DES attributed to chains.  This is the payload of db_bench's
+        ``chain_report`` rows (see ``docs/benchmarks.md``)."""
+        chains = self.l0_chains
+        out = {
+            "n_chains": len(chains),
+            "n_background_chains": len(self.chains) - len(chains),
+            "stall_attributed_s": round(
+                sum(c.stall_s for c in self.chains), 4),
+        }
+        if not chains:
+            return out
+        width = np.array([c.width for c in chains], np.float64)
+        length = np.array([c.length for c in chains], np.float64)
+        crit = np.array([c.critical_path_s for c in chains], np.float64)
+        out.update({
+            "mean_width_ssts": round(float(width.mean()), 2),
+            "p50_width_ssts": float(np.percentile(width, 50)),
+            "p99_width_ssts": float(np.percentile(width, 99)),
+            "max_width_ssts": int(width.max()),
+            "mean_length": round(float(length.mean()), 2),
+            "effective_length": round(self.effective_chain_length, 2),
+            "p50_length": float(np.percentile(length, 50)),
+            "p99_length": float(np.percentile(length, 99)),
+            "max_length": int(length.max()),
+            "p50_critical_path_ms": round(
+                float(np.percentile(crit, 50)) * 1e3, 3),
+            "p99_critical_path_ms": round(
+                float(np.percentile(crit, 99)) * 1e3, 3),
+            "mean_width_mb": round(self.mean_chain_width / 1e6, 3),
+        })
+        return out
 
     def note_compaction(self, level: int, bytes_moved: int) -> None:
         self.compactions_per_level[level] = self.compactions_per_level.get(level, 0) + 1
@@ -120,7 +233,8 @@ class Stats:
         out = {
             "io_amp": round(self.io_amp, 2),
             "write_amp": round(self.write_amp, 2),
-            "chains": len(self.chains),
+            "chains": len(self.l0_chains),
+            "bg_chains": len(self.chains) - len(self.l0_chains),
             "mean_chain_width_mb": round(self.mean_chain_width / 1e6, 3),
             "max_chain_width_mb": round(self.max_chain_width / 1e6, 3),
             "mean_chain_length": round(self.mean_chain_length, 2),

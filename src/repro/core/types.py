@@ -250,6 +250,13 @@ class LSMConfig:
     # switch (numpy by default); "jnp" / "pallas" pin this store's manifest
     # queries to the array backends (parity-tested drop-ins).
     index_backend: str | None = None
+    # Chain-aware background scheduling: the DES's compaction pool orders
+    # each drained batch by chain-head urgency (L0-pressure-relieving
+    # chains first — RocksDB low-pri semantics; the policy object's
+    # chain_priority hook refines the order).  False restores the legacy
+    # FIFO drain order.  Either way, structure is eager and identical —
+    # only device timing (and hence latency/stalls) differs.
+    chain_aware_sched: bool = True
     # Run LSMTree.check_invariants() (mechanism + policy invariants) on
     # every drain_jobs() — continuous validation for CI; leave off in
     # benchmarks (tests/conftest.py flips the env default on).

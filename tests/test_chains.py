@@ -1,0 +1,237 @@
+"""First-class compaction chains: tagging, ledger, scheduler, parity.
+
+The paper's §3 diagnosis — tail latency is governed by chain *width* (L0
+tiering fan-in) and *length* (levels a cascade traverses before the
+stall clears) — requires chains to be real runtime objects.  This suite
+pins:
+
+* chain invariants under paranoid mode: acyclic parent lineage,
+  child-after-parent scheduling, width/length matching the job topology,
+  ledger/job agreement;
+* tiering L0 chains wider than incremental-L0 chains, and vlsm's chains
+  shorter than rocksdb's (effective length: stages forced per L0 relief,
+  counting debt catch-up) on the same fillrandom stream;
+* the chain-aware scheduler: L0-relieving chains outrank background
+  sweeps, policy priority hooks order as documented, and turning the
+  scheduler off (``chain_aware_sched=False``) changes timing only —
+  never structure;
+* read-parity: chain tagging must not perturb GET accounting — replayed
+  byte-identical against the pre-LevelIndex seed capture.
+"""
+
+import hashlib
+import itertools
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro.core.lsm as lsm_mod
+import repro.core.sst as sst_mod
+from repro.bench_kv.workloads import load_keys, make_run_c
+from repro.core import DeviceModel, Simulator, get_policy, policies
+from repro.core.lsm import Job
+from repro.core.sim import ChainScheduler
+
+SCALE = 1 << 17
+LAM = SCALE / (64 << 20)
+
+
+def _reset_counters():
+    """Fresh process-global uid counters: bloom FP hashing mixes sst.uid
+    and the ledger compares job uids across runs."""
+    sst_mod._ids = itertools.count()
+    lsm_mod._job_ids = itertools.count()
+    lsm_mod._chain_ids = itertools.count()
+
+
+def _fill(policy_name: str, n: int = 40_000, seed: int = 7, **cfg_kw):
+    cfg = get_policy(policy_name).default_config(scale=SCALE)
+    if cfg_kw:
+        cfg = cfg.with_(**cfg_kw)
+    _reset_counters()
+    sim = Simulator(cfg, DeviceModel.scaled(LAM))
+    keys = load_keys(n, seed)
+    res = sim.run(np.zeros(n, np.uint8), keys,
+                  np.arange(n, dtype=np.float64) / 1e6)
+    return sim, res
+
+
+# ------------------------------------------------------- chain invariants
+@pytest.mark.parametrize("pname", policies.names())
+def test_chain_topology_invariants(pname):
+    """Ledger records agree with the scheduled job graph for every
+    registered policy (paranoid mode also validates continuously)."""
+    sim, _res = _fill(pname, n=25_000)
+    st = sim.stats
+    assert st.chains, "fillrandom must trigger compaction chains"
+    by_chain: dict[int, list[Job]] = {}
+    for j in sim.job_log:
+        assert j.chain_id >= 0, "every scheduled job carries a chain id"
+        if j.kind == "compact":
+            by_chain.setdefault(j.chain_id, []).append(j)
+    assert set(by_chain) == {c.chain_id for c in st.chains}, \
+        "every compact job belongs to exactly one ledgered chain"
+    for rec in st.chains:
+        jobs = by_chain[rec.chain_id]
+        assert [j.uid for j in jobs] == rec.job_uids
+        assert rec.n_jobs == len(jobs)
+        head = jobs[-1]
+        # width/length match the job topology
+        assert rec.width == (head.l0_consumed or head.n_in_ssts)
+        assert rec.width >= 1
+        assert rec.length == len({j.level for j in jobs}) >= 1
+        assert rec.width_bytes == sum(j.total_bytes for j in jobs)
+        uids = {j.uid for j in jobs}
+        for j in jobs:
+            # acyclic parent lineage, contained in the chain
+            visited = {j.uid}
+            p = j.parent_job
+            while p is not None:
+                assert p.uid in uids and p.uid not in visited
+                visited.add(p.uid)
+                p = p.parent_job
+            # child never starts before its parent finishes
+            if j.parent_job is not None:
+                assert j.t_start >= j.parent_job.t_finish - 1e-9
+        # the DES filled the temporal ledger
+        assert math.isfinite(rec.t_start)
+        assert rec.t_finish >= rec.t_start
+        assert rec.critical_path_s >= 0.0
+        if rec.trigger == "l0":
+            assert head.level == 0, "an l0 chain's head relieves L0"
+
+
+def test_flush_jobs_are_singleton_chains():
+    sim, _res = _fill("vlsm", n=25_000)
+    compact_chains = {c.chain_id for c in sim.stats.chains}
+    for j in sim.job_log:
+        if j.kind == "flush":
+            assert j.chain_id >= 0
+            assert j.parent_job is None
+            assert j.chain_id not in compact_chains
+
+
+# ------------------------------------------- paper claims (width, length)
+def test_tiering_l0_chains_wider_than_incremental():
+    """Tiering merges ALL of L0 at once (fan-in ~ l0_max_ssts); the
+    incremental designs pop one SST (fan-in 1)."""
+    sim_r, _ = _fill("rocksdb")
+    for incremental in ("vlsm", "lsmi"):
+        sim_i, _ = _fill(incremental)
+        assert (sim_r.stats.mean_chain_fanin
+                > sim_i.stats.mean_chain_fanin), incremental
+        assert sim_i.stats.mean_chain_fanin == 1.0
+
+
+def test_vlsm_chains_narrower_and_shorter_than_rocksdb():
+    """The same fillrandom stream: vlsm's mean chain width (bytes AND
+    fan-in) sits strictly below rocksdb's, and so does its chain length
+    measured on equal footing (effective length folds the debt catch-up
+    rocksdb defers into background sweeps back into the cascade)."""
+    sim_v, _ = _fill("vlsm")
+    sim_r, _ = _fill("rocksdb")
+    assert sim_v.stats.mean_chain_fanin < sim_r.stats.mean_chain_fanin
+    assert sim_v.stats.mean_chain_width < sim_r.stats.mean_chain_width
+    assert (sim_v.stats.effective_chain_length
+            < sim_r.stats.effective_chain_length)
+
+
+def test_chain_stall_attribution_bounded():
+    """L0 write-stop stalls are pinned on the chain clearing the awaited
+    slot; the attributed total can never exceed the run's stall total."""
+    sim, res = _fill("rocksdb")
+    attributed = sum(c.stall_s for c in sim.stats.chains)
+    assert attributed > 0.0, "a flood fill must hit the write-stop gate"
+    assert attributed <= res.stall_total + 1e-9
+
+
+# ------------------------------------------------- the chain-aware pool
+def test_chain_scheduler_orders_l0_relief_first():
+    """One slot serializes, so priority order is observable: the
+    L0-relieving chain (emitted later!) runs before the background sweep,
+    and the intra-chain dependency edge is honoured."""
+    pool = ChainScheduler(1)
+    bg = Job("compact", 2, 1000, 1000, 2, 2, chain_id=101)
+    deep = Job("compact", 1, 1000, 1000, 2, 2, chain_id=102)
+    head = Job("compact", 0, 1000, 1000, 4, 2, deps=[deep], chain_id=102,
+               parent_job=deep, l0_consumed=4)
+    pol = get_policy("rocksdb")
+    cfg = pol.default_config(scale=SCALE)
+    pool.schedule_batch([(bg, 1.0), (deep, 1.0), (head, 1.0)], 0.0, 0,
+                        lambda jobs: pol.chain_priority(cfg, jobs[-1], jobs))
+    assert deep.t_start < head.t_start, "parent before child"
+    assert head.t_start >= deep.t_finish - 1e-12
+    assert bg.t_start >= head.t_finish - 1e-12, \
+        "background sweep must wait for the L0-relieving chain"
+
+
+def test_policy_chain_priority_hooks():
+    """vlsm: narrowest chain first among L0 peers; lazy: wholesale
+    intermediate moves behind bottom-level greedy picks; both: L0 relief
+    always outranks background work."""
+    vl = get_policy("vlsm")
+    cfg = vl.default_config(scale=SCALE)
+    narrow = Job("compact", 0, 100, 100, 1, 1, chain_id=1, l0_consumed=1)
+    wide = Job("compact", 0, 9999, 9999, 1, 4, chain_id=2, l0_consumed=1)
+    bg = Job("compact", 2, 10, 10, 1, 1, chain_id=3)
+    assert (vl.chain_priority(cfg, narrow, [narrow])
+            < vl.chain_priority(cfg, wide, [wide])
+            < vl.chain_priority(cfg, bg, [bg]))
+
+    lz = get_policy("lazy")
+    lcfg = lz.default_config(scale=SCALE)
+    l0 = Job("compact", 0, 100, 100, 4, 1, chain_id=4, l0_consumed=4)
+    bottom = Job("compact", lcfg.max_levels - 2, 100, 100, 1, 1, chain_id=5)
+    mid = Job("compact", 1, 100, 100, 3, 3, chain_id=6)
+    assert (lz.chain_priority(lcfg, l0, [l0])
+            < lz.chain_priority(lcfg, bottom, [bottom])
+            < lz.chain_priority(lcfg, mid, [mid]))
+
+
+def test_chain_sched_toggle_changes_timing_only():
+    """chain_aware_sched=False restores FIFO drain order: the eager
+    structure — every ledgered chain, every byte — is identical; only
+    the DES's device timing may move."""
+    sim_on, _ = _fill("rocksdb", n=30_000)
+    sim_off, _ = _fill("rocksdb", n=30_000, chain_aware_sched=False)
+
+    def structural(sim):
+        return [(c.chain_id, c.trigger, c.width, c.length, c.width_bytes,
+                 tuple(c.stage_bytes), tuple(c.job_uids))
+                for c in sim.stats.chains]
+
+    assert structural(sim_on) == structural(sim_off)
+    assert sim_on.stats.io_amp == sim_off.stats.io_amp
+    assert sim_on.stats.merged_keys == sim_off.stats.merged_keys
+
+
+# ------------------------------------------------------------ read parity
+def test_chain_tagging_keeps_read_parity_byte_identical():
+    """Replay one seed-capture case directly: chain tagging and the
+    chain-aware scheduler must not perturb GET accounting by a byte
+    (the full 5-policy x 3-workload sweep lives in test_read_parity)."""
+    ref = json.loads((Path(__file__).parent / "data"
+                      / "read_parity_seed.json").read_text())
+    meta = ref["meta"]
+    want = ref["cases"]["vlsm:run_c"]
+    pop = np.unique(load_keys(meta["n_pop"], seed=meta["pop_seed"]))
+    spec = make_run_c(pop, meta["n_run"], dist=meta["dist"])
+    op_types = np.concatenate([np.zeros(pop.shape[0], np.uint8),
+                               spec.op_types])
+    keys = np.concatenate([pop, spec.keys])
+    arrivals = np.arange(op_types.shape[0], dtype=np.float64) / meta["rate"]
+    _reset_counters()
+    cfg = get_policy("vlsm").default_config(scale=meta["scale"])
+    sim = Simulator(cfg, DeviceModel.scaled(meta["scale"] / (64 << 20)),
+                    n_regions=meta["n_regions"])
+    res = sim.run(op_types, keys, arrivals)
+    g = res.op_types == 1
+    reads = res.get_reads[g].astype(np.int64)
+    probed = res.get_probed[g].astype(np.int64)
+    assert hashlib.sha256(reads.tobytes()).hexdigest() == want["reads_sha256"]
+    assert (hashlib.sha256(probed.tobytes()).hexdigest()
+            == want["probed_sha256"])
+    assert int(sim.stats.device_reads) == want["device_reads"]

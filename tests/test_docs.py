@@ -1,0 +1,33 @@
+"""Docs integrity: the acceptance-gated docs tree exists and the offline
+markdown link check CI runs (scripts/check_links.py) passes in-tree."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_required_docs_exist():
+    for name in ("architecture.md", "paper_map.md", "benchmarks.md"):
+        assert (ROOT / "docs" / name).is_file(), f"docs/{name} missing"
+
+
+def test_markdown_links_resolve():
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_links.py"),
+         "README.md", "docs"],
+        capture_output=True, text=True, cwd=ROOT)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_link_checker_catches_breakage(tmp_path):
+    (tmp_path / "bad.md").write_text("see [x](no_such_file.md) "
+                                     "and [y](#no-such-heading)\n# Real\n")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_links.py"),
+         str(tmp_path)],
+        capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "no_such_file.md" in proc.stdout
+    assert "no-such-heading" in proc.stdout
