@@ -67,6 +67,33 @@ def main() -> None:
                      f"eff_len={crow.get('effective_length', 0.0)}")
     except Exception as e:  # pragma: no cover
         print(f"# db_bench skipped: {e}")
+    # sharded fleet: P99 vs shard count at a fixed aggregate rate, plus
+    # the Zipf hot-shard interference point (full distributions live in
+    # db_bench's shard_sweep rows — see docs/benchmarks.md)
+    try:
+        from repro.bench_kv.db_bench import (HOT_RATE, HOT_SHARDS,
+                                             SHARD_COUNTS, SWEEP_RATE,
+                                             shard_sweep)
+        from repro.core.policies import get_policy, resolve_names
+        from .common import SCALE, emit
+        for nm in resolve_names(args.policy):
+            for k in SHARD_COUNTS:
+                cfg = get_policy(nm).default_config(scale=SCALE) \
+                    .with_(n_shards=k)
+                row = shard_sweep(cfg, 20_000, 30_000, scale=SCALE,
+                                  rate=SWEEP_RATE)
+                emit(f"db_bench.shard_sweep.p99_get_ms.{nm}.x{k}",
+                     row["p99_get_ms"], f"p999={row['p999_get_ms']}")
+            cfg = get_policy(nm).default_config(scale=SCALE) \
+                .with_(n_shards=HOT_SHARDS, shard_router="range")
+            row = shard_sweep(cfg, 20_000, 30_000, dist="zipf_ranked",
+                              scale=SCALE, rate=HOT_RATE)
+            emit(f"db_bench.shard_hot.p99_get_ms.{nm}.x{HOT_SHARDS}",
+                 row["p99_get_ms"],
+                 f"hot_frac={row['hot_shard_frac']};"
+                 f"stall_s={row['stall_total_s']}")
+    except Exception as e:  # pragma: no cover
+        print(f"# shard_sweep skipped: {e}")
     # serving-integration tail benchmark
     try:
         from .serving_tail import bench_serving_tail

@@ -7,10 +7,15 @@ db_bench, as do we.  ``read_path`` is the read-side companion: a
 read-heavy YCSB-C run that times the DES wall-clock end-to-end, tracking
 the batched LevelIndex GET path.  ``ycsb_a`` measures mixed-workload
 (50% read / 50% update) tails, ``seekrandom`` scan tails while a writer
-streams, and ``chain_report`` is the chain observatory — per-policy
+streams, ``chain_report`` is the chain observatory — per-policy
 compaction-chain width/length/critical-path distributions on the same
-fillrandom stream (paper §3, Figs 2 & 9).  ``--bench name[,name...]``
-restricts the sweep; row schemas are documented in ``docs/benchmarks.md``.
+fillrandom stream (paper §3, Figs 2 & 9) — and ``shard_sweep`` drives the
+sharded fleet: YCSB-A at a FIXED aggregate rate over 1/2/4 hash shards
+contending for one device (fleet P99/P99.9 vs shard count), plus a
+Zipf hot-shard scenario whose per-shard breakdown shows one shard's
+chains soaking up the stall attribution while every shard's read tail
+rides the same busy device.  ``--bench name[,name...]`` restricts the
+sweep; row schemas are documented in ``docs/benchmarks.md``.
 
 Policies are resolved from the registry (``repro.core.policies``): every
 registered policy — including ones registered after this file was written
@@ -120,6 +125,7 @@ def read_path(cfg: LSMConfig, n_ops: int = 200_000, n_pop: int = 100_000, *,
         "policy": cfg.policy, "ops": n_ops,
         "wall_clock_s": round(wall, 3),
         "p99_get_ms": round(res.pct(99, op=1) * 1e3, 3),
+        "p999_get_ms": round(res.pct(99.9, op=1) * 1e3, 3),
         "device_reads": int(sim.stats.device_reads),
         "mean_ssts_probed": round(float(res.get_probed[g].mean()), 3),
         "index_backend": cfg.index_backend or level_index.get_backend(),
@@ -196,6 +202,7 @@ def seekrandom(cfg: LSMConfig, n_ops: int = 40_000, n_pop: int = 60_000, *,
         "policy": cfg.policy, "ops": n_ops,
         "write_rate_ops_s": int(w_rate),
         "p99_scan_ms": round(res.pct(99, op=int(OpKind.SCAN)) * 1e3, 3),
+        "p999_scan_ms": round(res.pct(99.9, op=int(OpKind.SCAN)) * 1e3, 3),
         "p50_scan_ms": round(res.pct(50, op=int(OpKind.SCAN)) * 1e3, 3),
         "scan_blocks_per_op": round(sim.stats.scan_blocks / n_scans, 2),
         "scan_files_per_op": round(float(res.get_probed[sc].mean()), 2),
@@ -245,7 +252,9 @@ def ycsb_a(cfg: LSMConfig, n_ops: int = 60_000, n_pop: int = 60_000, *,
         "policy": cfg.policy, "ops": n_ops, "rate_ops_s": int(rate),
         "p50_get_ms": round(float(np.percentile(get_lat, 50)) * 1e3, 3),
         "p99_get_ms": round(float(np.percentile(get_lat, 99)) * 1e3, 3),
+        "p999_get_ms": round(float(np.percentile(get_lat, 99.9)) * 1e3, 3),
         "p99_put_ms": round(float(np.percentile(put_lat, 99)) * 1e3, 3),
+        "p999_put_ms": round(float(np.percentile(put_lat, 99.9)) * 1e3, 3),
         "stall_total_s": round(sum(run_stalls), 4),
         "n_stalls": len(run_stalls),
         "io_amp": round(sim.stats.io_amp, 2),
@@ -253,7 +262,94 @@ def ycsb_a(cfg: LSMConfig, n_ops: int = 60_000, n_pop: int = 60_000, *,
     }
 
 
-BENCHES = ("fillrandom", "read_path", "ycsb_a", "seekrandom", "chain_report")
+def shard_sweep(cfg: LSMConfig, n_ops: int = 30_000, n_pop: int = 40_000, *,
+                dist: str = "uniform", scale: int | None = None,
+                rate: float = 2_500.0, settle_s: float = 10.0,
+                seed: int = 7) -> dict:
+    """Sharded-fleet tails: YCSB-A at a fixed AGGREGATE rate over
+    ``cfg.n_shards`` hash shards contending for one shared device.
+
+    The aggregate arrival rate (and the device) is the same at every
+    shard count, so the row isolates what partitioning itself buys or
+    costs: each shard's memtable fills ``n_shards``× slower (fewer,
+    later chains per shard) while every chain still runs on the shared
+    compaction slots.  ``dist="zipf_ranked"`` with
+    ``cfg.shard_router="range"`` is the hot-shard scenario — rank-ordered
+    zipfian popularity co-locates the hot ranks in one shard's stripe
+    (plain ``zipfian`` scatters them across hash shards and stays
+    balanced), and the ``per_shard`` breakdown demonstrates the
+    cross-shard interference mechanism: the hot shard's chains soak up
+    the stall attribution (``chain_stall_s``) while the busy device
+    inflates EVERY shard's read tail (``p99_get_ms`` of cold shards).
+    """
+    scale = scale or cfg.memtable_size
+    lam = scale / (64 << 20)
+    pop = np.unique(load_keys(n_pop, seed))
+    spec = make_run_a(pop, n_ops, dist=dist)
+    load_arrivals, run_arrivals = _load_settle_run(pop.shape[0], n_ops,
+                                                   rate, settle_s)
+    op_types = np.concatenate([np.zeros(pop.shape[0], np.uint8),
+                               spec.op_types])
+    keys = np.concatenate([pop, spec.keys])
+    arrivals = np.concatenate([load_arrivals, run_arrivals])
+    sim = Simulator(cfg, DeviceModel.scaled(lam))
+    t0 = time.perf_counter()
+    res = sim.run(op_types, keys, arrivals)
+    wall = time.perf_counter() - t0
+    n_load = pop.shape[0]
+    run_lat = res.latency[n_load:]
+    run_types = res.op_types[n_load:]
+    shard_ids = res.shard_ids if res.shard_ids is not None \
+        else np.zeros(op_types.shape[0], np.int64)
+    run_shards = shard_ids[n_load:]
+    get_lat = run_lat[run_types == OpKind.GET]
+    put_lat = run_lat[run_types == OpKind.PUT]
+    run_stalls = _run_phase_stalls(sim, n_load)
+    per_shard = []
+    for s in range(cfg.n_shards):
+        m = run_shards == s
+        gl = run_lat[m & (run_types == OpKind.GET)]
+        s_stalls = [d for i, d in sim.stall_events
+                    if i >= n_load and shard_ids[i] == s]
+        per_shard.append({
+            "shard": s,
+            "ops": int(m.sum()),
+            "p99_get_ms": round(float(np.percentile(gl, 99)) * 1e3, 3)
+            if gl.size else 0.0,
+            "stall_s": round(sum(s_stalls), 4),
+            # write-stop time the DES pinned on this shard's chains
+            # (whole run: chains are load-born but stall the run phase)
+            "chain_stall_s": round(
+                sum(c.stall_s for c in sim.shard_stats[s].chains), 4),
+            "n_chains": len(sim.shard_stats[s].chains),
+        })
+    run_ops = np.array([p["ops"] for p in per_shard], np.float64)
+    return {
+        "bench": "shard_sweep", "workload": "run_a", "dist": dist,
+        "policy": cfg.policy, "n_shards": cfg.n_shards,
+        "router": cfg.shard_router, "ops": n_ops, "rate_ops_s": int(rate),
+        "p99_get_ms": round(float(np.percentile(get_lat, 99)) * 1e3, 3),
+        "p999_get_ms": round(float(np.percentile(get_lat, 99.9)) * 1e3, 3),
+        "p99_put_ms": round(float(np.percentile(put_lat, 99)) * 1e3, 3),
+        "p999_put_ms": round(float(np.percentile(put_lat, 99.9)) * 1e3, 3),
+        "stall_total_s": round(sum(run_stalls), 4),
+        "n_stalls": len(run_stalls),
+        "io_amp": round(sim.stats.io_amp, 2),
+        "hot_shard_frac": round(float(run_ops.max() / max(1.0, run_ops.sum())), 3),
+        "per_shard": per_shard,
+        "wall_clock_s": round(wall, 3),
+    }
+
+
+BENCHES = ("fillrandom", "read_path", "ycsb_a", "seekrandom",
+           "chain_report", "shard_sweep")
+SHARD_COUNTS = (1, 2, 4)      # the sweep axis (fixed aggregate rate)
+SWEEP_RATE = 5_000.0          # aggregate ops/s: stresses x1, easy at x4
+HOT_SHARDS = 4                # shard count of the Zipf hot-shard scenario
+HOT_RATE = 14_000.0           # hot scenario rate: the hot shard saturates
+                              # and write-stops while its chains keep the
+                              # shared device busy, inflating every
+                              # shard's read tail
 
 
 def main(argv=None):
@@ -285,10 +381,17 @@ def main(argv=None):
     n_scan_pop = 10_000 if args.quick else 60_000
     n_mixed = 8_000 if args.quick else 60_000
     n_mixed_pop = 10_000 if args.quick else 60_000
+    n_shard = 6_000 if args.quick else 30_000
+    n_shard_pop = 8_000 if args.quick else 40_000
 
     # Resolve the policy sweep from the registry: a policy registered
     # tomorrow shows up in every bench below with zero edits here.
-    chosen = resolve_names(args.policy)
+    # Unknown names exit with the registered list, not a KeyError trace.
+    try:
+        chosen = resolve_names(args.policy)
+    except KeyError:
+        ap.error(f"unknown policy name(s) in {args.policy!r}; "
+                 f"registered: {', '.join(policy_names())}")
 
     def cfg_for(name: str) -> LSMConfig:
         return get_policy(name).default_config(scale=scale)
@@ -335,6 +438,29 @@ def main(argv=None):
             row = chain_report(cfg, n_fill, scale=scale, run=run)
             rows.append(row)
             print(f"db_bench.chain_report.{name}: {row}")
+    # shard_sweep: fleet P99/P99.9 vs shard count at a fixed aggregate
+    # rate, then the Zipf hot-shard interference scenario at HOT_SHARDS.
+    if "shard_sweep" in benches:
+        for name in chosen:
+            for k in SHARD_COUNTS:
+                cfg = cfg_for(name).with_(n_shards=k)
+                row = shard_sweep(cfg, n_shard, n_shard_pop, scale=scale,
+                                  rate=SWEEP_RATE)
+                rows.append(row)
+                print(f"db_bench.shard_sweep.{name}.x{k}: {row}")
+            # Zipf hot-shard: rank-ordered zipfian over the RANGE router
+            # co-locates the hot ranks in one shard's stripe — the
+            # canonical hot-shard skew.  The per_shard breakdown is the
+            # cross-shard interference record: the hot shard saturates
+            # and write-stops (chain_stall_s pins the time on its
+            # chains) while the cold shards — no stalls of their own —
+            # still see their read tails inflate on the busy device.
+            cfg = cfg_for(name).with_(n_shards=HOT_SHARDS,
+                                      shard_router="range")
+            row = shard_sweep(cfg, n_shard, n_shard_pop, dist="zipf_ranked",
+                              scale=scale, rate=HOT_RATE)
+            rows.append(row)
+            print(f"db_bench.shard_hot.{name}.x{HOT_SHARDS}: {row}")
     if args.json:
         Path(args.json).write_text(json.dumps(rows, indent=1))
         print(f"wrote {args.json} ({len(rows)} rows)")

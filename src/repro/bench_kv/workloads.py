@@ -38,24 +38,40 @@ def load_keys(n: int, seed: int = 7) -> np.ndarray:
     return _rng(seed).integers(0, KEYSPACE, size=n, dtype=np.int64)
 
 
-def zipf_keys(population: np.ndarray, n: int, theta: float = 0.99,
-              seed: int = 11) -> np.ndarray:
-    """YCSB-style Zipfian sampling over an item population.
-
-    Ranks are sampled with probability ∝ 1/rank^theta via inverse-CDF over
-    the (normalized) generalized harmonic cumsum — exact, vectorized.
-    """
-    m = population.shape[0]
+def _zipf_rank_sample(m: int, n: int, theta: float, seed: int) -> np.ndarray:
+    """Sample ``n`` ranks in [0, m) with probability ∝ 1/(rank+1)^theta
+    via inverse-CDF over the (normalized) generalized harmonic cumsum —
+    exact, vectorized.  Shared by both zipf key mappers."""
     ranks = np.arange(1, m + 1, dtype=np.float64)
     w = 1.0 / ranks ** theta
     cdf = np.cumsum(w)
     cdf /= cdf[-1]
     u = _rng(seed).random(n)
-    idx = np.searchsorted(cdf, u, side="left")
+    return np.searchsorted(cdf, u, side="left")
+
+
+def zipf_keys(population: np.ndarray, n: int, theta: float = 0.99,
+              seed: int = 11) -> np.ndarray:
+    """YCSB-style Zipfian sampling over an item population."""
+    m = population.shape[0]
+    idx = _zipf_rank_sample(m, n, theta, seed)
     # YCSB scatters the hot ranks across the keyspace via a hash; shuffling
     # the population achieves the same decorrelation.
     perm = _rng(seed + 1).permutation(m)
     return population[perm[idx]]
+
+
+def zipf_ranked_keys(population: np.ndarray, n: int, theta: float = 0.99,
+                     seed: int = 11) -> np.ndarray:
+    """Zipfian sampling WITHOUT YCSB's scatter permutation: rank *r* maps
+    to the r-th **smallest** key, so popularity decays along the key
+    order.  This is the hot-range request pattern — and, over a
+    range-partitioned keyspace, the canonical *hot-shard* scenario: the
+    shard owning the head of the key order absorbs most of the traffic
+    while its neighbours idle (``db_bench``'s ``shard_sweep`` hot-shard
+    rows drive exactly this against the ``range`` router)."""
+    idx = _zipf_rank_sample(population.shape[0], n, theta, seed)
+    return np.sort(population)[idx]
 
 
 def pareto_keys(population: np.ndarray, n: int, alpha: float = 1.16,
@@ -90,6 +106,8 @@ def _mixed(name: str, population: np.ndarray, n: int, read_frac: float,
     op_types = (r.random(n) < read_frac).astype(np.uint8)  # 1 = read
     if dist == "zipfian":
         keys = zipf_keys(population, n, seed=seed + 2)
+    elif dist == "zipf_ranked":
+        keys = zipf_ranked_keys(population, n, seed=seed + 2)
     elif dist == "pareto":
         keys = pareto_keys(population, n, seed=seed + 2)
     else:

@@ -22,15 +22,16 @@ from .level_index import LevelIndex
 from .lsm import Job, LSMTree
 from .memtable import Memtable
 from .policies import CompactionPolicy, get_policy
+from .shard import ShardRouter, ShardedStore
 from .sim import SimResult, Simulator
 from .sst import SST
-from .stats import ChainRecord, Stats
+from .stats import ChainRecord, FleetStats, Stats
 from .types import (DeviceModel, LSMConfig, OpKind, Policy, RequestBatch,
                     ResultBatch)
 
 __all__ = [
-    "ChainRecord", "CompactionPolicy", "DeviceModel", "Job", "LSMConfig",
-    "LSMTree", "LevelIndex", "Memtable", "OpKind", "Policy", "RequestBatch",
-    "ResultBatch", "SST", "SimResult", "Simulator", "Stats", "get_policy",
-    "policies",
+    "ChainRecord", "CompactionPolicy", "DeviceModel", "FleetStats", "Job",
+    "LSMConfig", "LSMTree", "LevelIndex", "Memtable", "OpKind", "Policy",
+    "RequestBatch", "ResultBatch", "SST", "ShardRouter", "ShardedStore",
+    "SimResult", "Simulator", "Stats", "get_policy", "policies",
 ]

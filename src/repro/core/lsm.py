@@ -64,6 +64,7 @@ class Job:
     l0_consumed: int = 0         # L0 SSTs this job removed (for the DES)
     chain_id: int = -1           # the chain this job belongs to
     parent_job: "Job | None" = None  # intra-chain predecessor (dep edge)
+    shard: int = 0               # shard of the emitting tree (fleet DES)
     # filled by the DES:
     t_start: float = 0.0
     t_finish: float = 0.0
@@ -75,14 +76,23 @@ class Job:
 
 
 class LSMTree:
-    """A single region's LSM index."""
+    """A single shard/region's LSM index.
 
-    def __init__(self, cfg: LSMConfig, stats: Stats | None = None):
+    ``shard_id``/``region_id`` name the tree's place in a sharded fleet
+    (both 0 for a standalone tree); every emitted :class:`Job` is
+    stamped with the tree's ``shard_id`` (the DES keys compaction
+    exclusivity on its own flat tree index).
+    """
+
+    def __init__(self, cfg: LSMConfig, stats: Stats | None = None,
+                 shard_id: int = 0, region_id: int = 0):
         self.cfg = cfg
         # The strategy object owning every compaction decision; the tree
         # itself is a policy-agnostic mechanism engine.
         self.policy = get_policy(cfg.policy)
         self.stats = stats if stats is not None else Stats()
+        self.shard_id = shard_id
+        self.region_id = region_id
         self.memtable = Memtable(cfg.memtable_size, cfg.kv_size)
         self.immutables: list[Memtable] = []
         # levels[0] is L0: FIFO, newest LAST; overlapping allowed.
@@ -195,7 +205,7 @@ class LSMTree:
         # back-pressure, not chain lineage, so parent_job stays None.
         if sst.n == 0:
             job = Job("flush", -1, 0, 0, 0, 0, deps=blocking,
-                      chain_id=next(_chain_ids))
+                      chain_id=next(_chain_ids), shard=self.shard_id)
             self.pending_jobs.append(job)
             return job, chain_jobs
         self.levels[0].append(sst)
@@ -204,7 +214,7 @@ class LSMTree:
         self.stats.ssts_created += 1
         self.stats.manifest_flushes += 1
         job = Job("flush", -1, 0, sst.size, 0, 1, deps=blocking,
-                  chain_id=next(_chain_ids))
+                  chain_id=next(_chain_ids), shard=self.shard_id)
         self.pending_jobs.append(job)
         return job, chain_jobs
 
@@ -421,7 +431,7 @@ class LSMTree:
         self.stats.note_compaction(level, read_b + write_b)
         job = Job("compact", level, read_b, write_b, n_in, n_out, deps=deps,
                   chain_id=self._active_chain,
-                  parent_job=deps[0] if deps else None)
+                  parent_job=deps[0] if deps else None, shard=self.shard_id)
         self.pending_jobs.append(job)
         return job
 

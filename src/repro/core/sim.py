@@ -5,39 +5,53 @@ a *fixed rate* into an unbounded queue (coordinated-omission-free).  The sim
 reproduces that exactly:
 
 * arrivals are deterministic (rate R) — the open-loop generator;
-* foreground service is a single FIFO queue with per-kind costs
+* foreground service is ONE FIFO queue **per shard** (``cfg.n_shards``;
+  one queue total for the classic single-tree store) with per-kind costs
   (:class:`repro.core.types.OpKind`): constant CPU for PUT/DELETE, per-GET
   service from the store's *actual* probe work (device block reads ×
   device model), per-SCAN service from the files seeked and blocks spanned
   (sequential transfer) — read kinds are inflated while compactions keep
   the device busy;
 * background work (flushes + compaction chains emitted by the eager
-  structural LSM in :mod:`repro.core.lsm`) runs on a slot pool
-  (``DeviceModel.compaction_slots``); job durations come from real bytes;
-  jobs *sharing a source level* in the same region serialize (RocksDB's
+  structural LSM in :mod:`repro.core.lsm`) runs on slot pools **shared by
+  every shard** (``DeviceModel.compaction_slots`` — the device does not
+  multiply with the shard count); job durations come from real bytes;
+  jobs *sharing a source level* in the same tree serialize (RocksDB's
   per-level compaction exclusivity — the reason wide tiering chains cannot
-  hide behind thread parallelism), while independent levels overlap;
+  hide behind thread parallelism), while independent levels — and
+  independent shards — overlap;
 * structural events advance on the **processed clock**: a memtable fills
   when its last PUT is *serviced* (exact Lindley recursion maintained
-  incrementally), so under saturation compaction triggers spread out the
-  way a real store's do instead of bunching at arrival time;
-* write stalls are computed from *temporal* L0 occupancy: every flushed SST
-  occupies an L0 slot until the compaction job that consumed it finishes; a
-  fill event stalls when occupancy ≥ the stop limit (RocksDB's write-stop),
-  or when the previous flush is still in flight (write-buffer stall);
-* end-to-end latency is the exact Lindley recursion over the single queue,
-  vectorized:  D_i = S_i + max_{j<=i}(arr_j - S_{j-1}),  lat_i = D_i - arr_i.
+  incrementally per shard), so under saturation compaction triggers spread
+  out the way a real store's do instead of bunching at arrival time;
+* write stalls are computed from *temporal* L0 occupancy per tree: every
+  flushed SST occupies an L0 slot until the compaction job that consumed
+  it finishes; a fill event stalls when occupancy ≥ the stop limit
+  (RocksDB's write-stop), or when the previous flush is still in flight
+  (write-buffer stall);
+* end-to-end latency is the exact Lindley recursion over each shard's
+  queue, vectorized:  D_i = S_i + max_{j<=i}(arr_j - S_{j-1}),
+  lat_i = D_i - arr_i — then re-gathered in arrival order.
+
+Sharding (``cfg.n_shards > 1``) couples the shards *only* through the
+device: the foreground queues are independent, but all flushes and
+compaction chains contend for the same slot pools and every shard's read
+service is inflated by the global count of running compactions — one
+shard's wide chain raises every shard's read tail (the cross-shard
+interference scenario ``db_bench``'s ``shard_sweep`` measures).
 """
 
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from .lsm import Job, LSMTree
 from .policies import get_policy
-from .stats import Stats
+from .shard import ShardRouter
+from .stats import FleetStats, Stats
 from .types import DeviceModel, LSMConfig, OpKind, RequestBatch
 
 PUT_SERVICE = 1.5e-6      # CPU service per put/delete (s); ~0.7 Mops/s queue
@@ -56,11 +70,14 @@ class SimResult:
     stall_total: float = 0.0
     stall_max: float = 0.0
     n_stalls: int = 0
-    stats: Stats | None = None
+    stats: Stats | FleetStats | None = None
     job_log: list[Job] = field(default_factory=list)
     makespan: float = 0.0
     get_reads: np.ndarray | None = None    # per-op device block reads
     get_probed: np.ndarray | None = None   # per-op SSTs probed (GET + SCAN)
+    shard_ids: np.ndarray | None = None    # per-op shard (None: single tree)
+    n_shards: int = 1
+    stall_events: list[tuple[int, float]] = field(default_factory=list)
 
     def pct(self, q: float, op: int | None = None) -> float:
         lat = self.latency if op is None else self.latency[self.op_types == op]
@@ -84,6 +101,23 @@ class SimResult:
     def p99_scan(self) -> float:
         return self.pct(99, int(OpKind.SCAN))
 
+    # The paper reports P99.9 tails (§5); surface them per kind too.
+    @property
+    def p999(self) -> float:
+        return self.pct(99.9)
+
+    @property
+    def p999_put(self) -> float:
+        return self.pct(99.9, 0)
+
+    @property
+    def p999_get(self) -> float:
+        return self.pct(99.9, 1)
+
+    @property
+    def p999_scan(self) -> float:
+        return self.pct(99.9, int(OpKind.SCAN))
+
     @property
     def throughput(self) -> float:
         return self.arrivals.shape[0] / max(self.makespan, 1e-9)
@@ -105,8 +139,11 @@ class SimResult:
             "p50_ms": round(self.pct(50) * 1e3, 3),
             "p90_ms": round(self.pct(90) * 1e3, 3),
             "p99_ms": round(self.pct(99) * 1e3, 3),
+            "p999_ms": round(self.p999 * 1e3, 3),
             "p99_put_ms": round(self.p99_put * 1e3, 3),
             "p99_get_ms": round(self.p99_get * 1e3, 3),
+            "p999_put_ms": round(self.p999_put * 1e3, 3),
+            "p999_get_ms": round(self.p999_get * 1e3, 3),
             "stall_total_s": round(self.stall_total, 4),
             "stall_max_s": round(self.stall_max, 4),
             "n_stalls": self.n_stalls,
@@ -114,9 +151,47 @@ class SimResult:
         }
         if (self.op_types == OpKind.SCAN).any():
             out["p99_scan_ms"] = round(self.p99_scan * 1e3, 3)
+            out["p999_scan_ms"] = round(self.p999_scan * 1e3, 3)
         if self.stats is not None:
             out.update(self.stats.summary())
         return out
+
+    def per_shard_summary(self) -> list[dict]:
+        """Per-shard latency/stall breakdown (fleet runs only; a single
+        tree returns one row covering every op).  The cross-shard
+        interference signal reads directly off these rows: the hot
+        shard's stall seconds against every shard's inflated read tail."""
+        if self.shard_ids is None:
+            shard_ids = np.zeros(self.latency.shape[0], np.int64)
+        else:
+            shard_ids = self.shard_ids
+        # every shard gets a row, including trailing shards no op routed to
+        n_shards = max(self.n_shards,
+                       int(shard_ids.max()) + 1 if shard_ids.size else 1)
+        rows = []
+        for s in range(n_shards):
+            m = shard_ids == s
+            lat = self.latency[m]
+            kinds = self.op_types[m]
+            stalls = [d for i, d in self.stall_events
+                      if shard_ids[i] == s]
+            row = {
+                "shard": s,
+                "ops": int(m.sum()),
+                "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3)
+                if lat.size else 0.0,
+                "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3)
+                if lat.size else 0.0,
+                "p999_ms": round(float(np.percentile(lat, 99.9)) * 1e3, 3)
+                if lat.size else 0.0,
+                "stall_total_s": round(sum(stalls), 4),
+                "n_stalls": len(stalls),
+            }
+            g = lat[kinds == OpKind.GET]
+            if g.size:
+                row["p99_get_ms"] = round(float(np.percentile(g, 99)) * 1e3, 3)
+            rows.append(row)
+        return rows
 
 
 class SlotPool:
@@ -177,6 +252,16 @@ class ChainScheduler(SlotPool):
 
 
 class Simulator:
+    """The DES: per-shard foreground queues over one shared device.
+
+    ``cfg.n_shards == 1`` is the classic engine — one foreground queue,
+    optionally ``n_regions`` trees behind it (the paper's Fig 10 region
+    experiment) — and stays byte-identical to the pre-sharding code.
+    ``cfg.n_shards > 1`` partitions the keyspace (``ShardRouter``) over
+    per-shard trees, each with its own queue/memtable/stall state, all
+    sharing the flush slot and the chain-aware compaction pool.
+    """
+
     def __init__(self, cfg: LSMConfig, device: DeviceModel | None = None,
                  n_regions: int = 1):
         self.cfg = cfg
@@ -189,19 +274,36 @@ class Simulator:
         # two granularities from silently diverging.
         assert cfg.block_size == self.device.block_size, \
             "LSMConfig.block_size must match DeviceModel.block_size"
+        self.n_shards = cfg.n_shards
+        assert self.n_shards == 1 or n_regions == 1, \
+            "regions subdivide a single-shard store; a sharded fleet " \
+            "keeps one region per shard"
         self.n_regions = n_regions
-        self.stats = Stats()
-        self.trees = [LSMTree(cfg, self.stats) for _ in range(n_regions)]
+        self.router = ShardRouter.from_config(cfg)
+        # One Stats ledger per shard; n_shards == 1 keeps the legacy shape
+        # (all region trees share THE Stats), a fleet gets a read-only
+        # aggregate view over the per-shard ledgers.
+        self.shard_stats = [Stats() for _ in range(self.n_shards)]
+        self.stats: Stats | FleetStats = self.shard_stats[0] \
+            if self.n_shards == 1 else FleetStats(self.shard_stats)
+        # Flat shard-major tree list: trees[shard * n_regions + region].
+        self.trees = [LSMTree(cfg, self.shard_stats[s], shard_id=s,
+                              region_id=r)
+                      for s in range(self.n_shards)
+                      for r in range(n_regions)]
         # Dedicated flush slot + shared compaction slots (RocksDB's
-        # high-priority flush pool vs low-priority compaction pool).
+        # high-priority flush pool vs low-priority compaction pool) —
+        # shared across ALL shards: the device doesn't grow with the
+        # fleet, which is exactly the contention under study.
         self.flush_pool = SlotPool(1)
         self.compact_pool = ChainScheduler(
             max(1, self.device.compaction_slots - 1))
-        # temporal L0 occupancy per region: [appear_t, clears_at,
+        # temporal L0 occupancy per tree: [appear_t, clears_at,
         # clearing_chain_id] entries (chain_id -1 until consumed — used to
         # attribute write-stop stall time to the chain that clears it)
-        self.l0_entries: list[list[list]] = [[] for _ in range(n_regions)]
-        self.flush_inflight: list[list[float]] = [[] for _ in range(n_regions)]
+        n_trees = self.n_shards * n_regions
+        self.l0_entries: list[list[list]] = [[] for _ in range(n_trees)]
+        self.flush_inflight: list[list[float]] = [[] for _ in range(n_trees)]
         self.job_log: list[Job] = []
         self.stall_events: list[tuple[int, float]] = []  # (op_idx, duration)
 
@@ -217,40 +319,44 @@ class Simulator:
         return self.policy.chain_priority(self.cfg, chain_jobs[-1],
                                           chain_jobs)
 
-    def _schedule_drained(self, tree: LSMTree, region: int, t: float) -> None:
+    def _schedule_drained(self, tree: LSMTree, tree_idx: int,
+                          t: float) -> None:
         drained = tree.drain_jobs()
         # Compactions first (priority-ordered by chain urgency), then
         # flushes: a flush's only dep is a compaction chain head, so its
         # dep is always scheduled by the time the flush pool sees it.
+        # tree_idx namespaces the per-(tree, level) exclusivity key: two
+        # shards' L1 compactions are independent and may overlap.
         compacts = [(j, self._job_duration(j)) for j in drained
                     if j.kind == "compact"]
         if compacts:
             if self.cfg.chain_aware_sched:
-                self.compact_pool.schedule_batch(compacts, t, region,
+                self.compact_pool.schedule_batch(compacts, t, tree_idx,
                                                  self._chain_key)
             else:
                 for job, dur in compacts:     # legacy FIFO drain order
-                    self.compact_pool.schedule(job, t, dur, region)
+                    self.compact_pool.schedule(job, t, dur, tree_idx)
             for job, _dur in compacts:        # emission order, like drain
                 if job.level == 0 and job.l0_consumed:
-                    self._consume_l0(region, job.l0_consumed, job.t_finish,
+                    self._consume_l0(tree_idx, job.l0_consumed, job.t_finish,
                                      job.chain_id)
                 self._note_scheduled(job)
                 self.job_log.append(job)
         for job in drained:
             if job.kind != "flush":
                 continue
-            self.flush_pool.schedule(job, t, self._job_duration(job), region)
-            self.flush_inflight[region].append(job.t_finish)
+            self.flush_pool.schedule(job, t, self._job_duration(job),
+                                     tree_idx)
+            self.flush_inflight[tree_idx].append(job.t_finish)
             if job.bytes_written > 0:
                 # SST appears in L0 when the flush lands.
-                self.l0_entries[region].append([job.t_finish, np.inf, -1])
+                self.l0_entries[tree_idx].append([job.t_finish, np.inf, -1])
             self.job_log.append(job)
 
     def _note_scheduled(self, job: Job) -> None:
         """Fill the chain ledger's temporal fields and (paranoid) validate
         the intra-chain dependency edge the scheduler just honoured."""
-        rec = self.stats.chain_index.get(job.chain_id)
+        rec = self.shard_stats[job.shard].chain_index.get(job.chain_id)
         if rec is not None:
             rec.t_start = min(rec.t_start, job.t_start)
             rec.t_finish = max(rec.t_finish, job.t_finish)
@@ -258,22 +364,22 @@ class Simulator:
             assert job.t_start >= job.parent_job.t_finish - 1e-9, \
                 "chain child scheduled before its parent finished"
 
-    def _consume_l0(self, region: int, k: int, clears_at: float,
+    def _consume_l0(self, tree_idx: int, k: int, clears_at: float,
                     chain_id: int = -1) -> None:
-        pending = [e for e in self.l0_entries[region] if e[1] == np.inf]
+        pending = [e for e in self.l0_entries[tree_idx] if e[1] == np.inf]
         pending.sort(key=lambda e: e[0])
         for e in pending[:k]:
             e[1] = clears_at
             e[2] = chain_id
 
-    def _l0_stall(self, region: int, t: float) -> tuple[float, int]:
+    def _l0_stall(self, tree_idx: int, t: float) -> tuple[float, int]:
         """Wait until temporal L0 occupancy drops below the stop limit.
         Returns ``(stall, chain_id)`` — the chain whose head clears the
         slot the queue waits for (-1 when unknown); the caller attributes
         the stall to that chain only when the L0 wait is the binding
         component of the fill event's delay."""
         stop = self.policy.l0_stop_ssts(self.cfg)
-        active = sorted((e[1], e[2]) for e in self.l0_entries[region]
+        active = sorted((e[1], e[2]) for e in self.l0_entries[tree_idx]
                         if e[0] <= t and e[1] > t)
         if len(active) < stop:
             return 0.0, -1
@@ -284,9 +390,9 @@ class Simulator:
             cid = -1
         return max(0.0, target - t), int(cid)
 
-    def _wb_stall(self, region: int, t: float) -> float:
+    def _wb_stall(self, tree_idx: int, t: float) -> float:
         """Write-buffer stall: previous flush still in flight."""
-        unfinished = sorted(f for f in self.flush_inflight[region] if f > t)
+        unfinished = sorted(f for f in self.flush_inflight[tree_idx] if f > t)
         allowed = self.policy.write_buffer_limit(self.cfg) - 1
         if len(unfinished) < allowed:
             return 0.0
@@ -322,52 +428,92 @@ class Simulator:
         block_t = (self.device.io_latency
                    + self.device.block_size / self.device.read_bw)
 
+        # Columnar routing: shard (hash/range partition of the keyspace),
+        # then region within the (single) shard.  tree = flat shard-major.
+        shard_ids = self.router.shard_of(keys) if self.n_shards > 1 \
+            else np.zeros(n, np.int64)
         regions = (keys % self.n_regions).astype(np.int64) \
             if self.n_regions > 1 else np.zeros(n, np.int64)
+        tree_ids = shard_ids * self.n_regions + regions
         write_mask = (op_types == OpKind.PUT) | (op_types == OpKind.DELETE)
         write_idx = np.nonzero(write_mask)[0]
 
-        # Fill-event schedule: the op index at which each region's memtable
-        # fills = every kpm-th write (PUT or DELETE) routed to that region.
-        fill_events: list[tuple[int, int]] = []  # (op_idx, region)
-        for r in range(self.n_regions):
-            r_writes = write_idx[regions[write_idx] == r]
-            marks = r_writes[kpm - 1::kpm]
-            fill_events.extend((int(m), r) for m in marks)
+        # Fill-event schedule: the op index at which each tree's memtable
+        # fills = every kpm-th write (PUT or DELETE) routed to that tree.
+        fill_events: list[tuple[int, int]] = []  # (op_idx, tree_idx)
+        for ti in range(len(self.trees)):
+            t_writes = write_idx[tree_ids[write_idx] == ti]
+            marks = t_writes[kpm - 1::kpm]
+            fill_events.extend((int(m), ti) for m in marks)
         fill_events.sort()
+        ev_by_shard: list[list[tuple[int, int]]] = \
+            [[] for _ in range(self.n_shards)]
+        for op_i, ti in fill_events:
+            ev_by_shard[ti // self.n_regions].append((op_i, ti))
 
-        # Processed clock: D = departure time of the most recently serviced
-        # op (exact Lindley, maintained incrementally per window).
-        D = 0.0
-        prev = 0
-        for op_i, region in fill_events:
-            D = self._advance_clock(D, prev, op_i + 1, op_types, keys,
-                                    scan_lens, regions, get_reads,
-                                    get_probed, service, arrivals, block_t)
-            prev = op_i + 1
-            t = D  # the fill happens when its last write is serviced
-            tree = self.trees[region]
+        # Per-shard processed clocks: D[s] = departure time of shard s's
+        # most recently serviced op (exact Lindley per queue, maintained
+        # incrementally per window); cur[s] = the shard's op cursor into
+        # its own arrival sub-sequence.  Events are processed in
+        # SIMULATED-TIME order: each shard's next fill time depends only
+        # on its own queue, so one event per shard is staged (advancing
+        # that shard's clock) and a heap pops the globally earliest —
+        # shared-slot scheduling then sees chronological ready times, so
+        # a lagging shard's backlogged jobs cannot phantom-block another
+        # shard's earlier device work.  (op_i tiebreak: deterministic.)
+        shard_pos = [np.arange(n)] if self.n_shards == 1 else \
+            [np.nonzero(shard_ids == s)[0] for s in range(self.n_shards)]
+        D = [0.0] * self.n_shards
+        cur = [0] * self.n_shards
+        ptrs = [0] * self.n_shards
+        heap: list[tuple[float, int, int, int]] = []
+
+        def stage(s: int) -> None:
+            """Advance shard s's clock to its next fill event (applying
+            the window structurally) and stage the event for dispatch."""
+            if ptrs[s] >= len(ev_by_shard[s]):
+                return
+            op_i, ti = ev_by_shard[s][ptrs[s]]
+            pos = shard_pos[s]
+            upper = int(np.searchsorted(pos, op_i, side="right"))
+            D[s] = self._advance_clock(s, D[s], pos[cur[s]:upper], op_types,
+                                       keys, scan_lens, regions, get_reads,
+                                       get_probed, service, arrivals,
+                                       block_t)
+            cur[s] = upper
+            heapq.heappush(heap, (D[s], op_i, s, ti))
+
+        for s in range(self.n_shards):
+            stage(s)
+        while heap:
+            t, op_i, s, ti = heapq.heappop(heap)
+            # t = D[s]: the fill happens when its last write is serviced
+            tree = self.trees[ti]
             tree.seal_memtable()
-            stall = self._wb_stall(region, t)
+            stall = self._wb_stall(ti, t)
             tree.flush_immutable()
-            self._schedule_drained(tree, region, t)
+            self._schedule_drained(tree, ti, t)
             bg = tree.background_triggers()
             if bg:
-                self._schedule_drained(tree, region, t)
-            l0_stall, cid = self._l0_stall(region, t)
+                self._schedule_drained(tree, ti, t)
+            l0_stall, cid = self._l0_stall(ti, t)
             if l0_stall > stall and cid >= 0:
                 # the L0 wait is the binding delay: pin it on the chain
-                # whose head clears the awaited slot
-                rec = self.stats.chain_index.get(cid)
+                # whose head clears the awaited slot (the shard's ledger)
+                rec = self.shard_stats[s].chain_index.get(cid)
                 if rec is not None:
                     rec.stall_s += l0_stall
             stall = max(stall, l0_stall)
             if stall > 0:
                 service[op_i] += stall
-                D += stall
+                D[s] += stall
                 self.stall_events.append((op_i, stall))
-        self._advance_clock(D, prev, n, op_types, keys, scan_lens, regions,
-                            get_reads, get_probed, service, arrivals, block_t)
+            ptrs[s] += 1
+            stage(s)
+        for s in range(self.n_shards):
+            self._advance_clock(s, D[s], shard_pos[s][cur[s]:], op_types,
+                                keys, scan_lens, regions, get_reads,
+                                get_probed, service, arrivals, block_t)
 
         # --- read service refinement: device busy while compactions run ----
         starts = np.sort(np.array([j.t_start for j in self.job_log
@@ -385,12 +531,20 @@ class Simulator:
             service[is_scan] += (get_reads[is_scan] * seq_block_t
                                  * (BUSY_ALPHA * busy[is_scan]))
 
-        # --- exact Lindley over the single FIFO queue ----------------------
-        S = np.cumsum(service)
-        base = arrivals.astype(np.float64).copy()
-        base[1:] -= S[:-1]
-        departures = S + np.maximum.accumulate(base)
-        latency = departures - arrivals
+        # --- exact Lindley over each shard's FIFO queue --------------------
+        # (one queue = the legacy single-queue recursion, bit for bit)
+        latency = np.zeros(n, np.float64)
+        makespan = 0.0
+        for s in range(self.n_shards):
+            pos = shard_pos[s]
+            if pos.shape[0] == 0:
+                continue
+            S = np.cumsum(service[pos])
+            base = arrivals[pos].astype(np.float64).copy()
+            base[1:] -= S[:-1]
+            departures = S + np.maximum.accumulate(base)
+            latency[pos] = departures - arrivals[pos]
+            makespan = max(makespan, float(departures[-1]))
 
         stalls = np.array([d for _i, d in self.stall_events]) \
             if self.stall_events else np.zeros(0)
@@ -399,32 +553,38 @@ class Simulator:
             stall_total=float(stalls.sum()),
             stall_max=float(stalls.max()) if stalls.size else 0.0,
             n_stalls=int(stalls.size), stats=self.stats,
-            job_log=self.job_log, makespan=float(departures[-1]),
+            job_log=self.job_log, makespan=makespan,
             get_reads=get_reads, get_probed=get_probed,
+            shard_ids=shard_ids if self.n_shards > 1 else None,
+            n_shards=self.n_shards,
+            stall_events=self.stall_events,
         )
 
     # ------------------------------------------------------------------
-    def _advance_clock(self, D: float, lo: int, hi: int, op_types, keys,
-                       scan_lens, regions, get_reads, get_probed, service,
-                       arrivals, block_t: float) -> float:
-        """Apply ops [lo, hi) structurally and advance the processed clock.
+    def _advance_clock(self, shard: int, D: float, idx: np.ndarray,
+                       op_types, keys, scan_lens, regions, get_reads,
+                       get_probed, service, arrivals,
+                       block_t: float) -> float:
+        """Apply shard ``shard``'s ops at global indices ``idx`` (its next
+        arrival-order window) structurally and advance its processed clock.
 
-        Returns the departure time of op hi-1 (before any stall injection).
-        Each region's window slice becomes ONE typed ``RequestBatch``
-        through ``LSMTree.apply_batch`` (writes land first, then the
-        window's GETs/SCANs observe constant tree state — regions are
-        independent, so per-region application equals global
+        Returns the departure time of the window's last op (before any
+        stall injection).  Each region's window slice becomes ONE typed
+        ``RequestBatch`` through ``LSMTree.apply_batch`` (writes land
+        first, then the window's GETs/SCANs observe constant tree state —
+        trees are independent, so per-tree application equals global
         writes-then-reads order).  Read service includes the base
         device-read cost here; the busy-inflation term is refined in a
         vectorized post-pass.
         """
-        if hi <= lo:
+        if idx.shape[0] == 0:
             return D
-        sl = slice(lo, hi)
-        w_types = op_types[sl]
-        w_keys = keys[sl]
-        w_lens = scan_lens[sl]
-        w_regions = regions[sl]
+        w_types = op_types[idx]
+        w_keys = keys[idx]
+        w_lens = scan_lens[idx]
+        w_regions = regions[idx]
+        stats = self.shard_stats[shard]
+        tree_base = shard * self.n_regions
         scan_delivered = np.zeros(w_types.shape[0], np.int64)
         has_reads = bool(((w_types == OpKind.GET)
                           | (w_types == OpKind.SCAN)).any())
@@ -437,31 +597,31 @@ class Simulator:
             if not has_reads:
                 # Write-only window (the fillrandom hot path): skip the
                 # batch machinery, same array-order semantics.
-                self.trees[r]._write_batch(w_keys[ri],
-                                           w_types[ri] == OpKind.DELETE)
+                self.trees[tree_base + r]._write_batch(
+                    w_keys[ri], w_types[ri] == OpKind.DELETE)
                 continue
-            res = self.trees[r].apply_batch(
+            res = self.trees[tree_base + r].apply_batch(
                 RequestBatch(w_types[ri], w_keys[ri], w_lens[ri]))
             is_get = res.kinds == OpKind.GET
             is_scan = res.kinds == OpKind.SCAN
             if is_get.any() or is_scan.any():
                 rd = np.nonzero(is_get | is_scan)[0]
-                get_reads[lo + ri[rd]] = res.reads[rd]
-                get_probed[lo + ri[rd]] = res.probed[rd]
+                get_reads[idx[ri[rd]]] = res.reads[rd]
+                get_probed[idx[ri[rd]]] = res.probed[rd]
             if is_get.any():
-                self.stats.device_reads += int(res.reads[is_get].sum())
-                self.stats.ops += int(is_get.sum())
+                stats.device_reads += int(res.reads[is_get].sum())
+                stats.ops += int(is_get.sum())
             if is_scan.any():
                 sc = np.nonzero(is_scan)[0]
                 scan_delivered[ri[sc]] = res.seqs[sc]
-                self.stats.scan_blocks += int(res.reads[is_scan].sum())
-                self.stats.scan_ops += int(is_scan.sum())
-                self.stats.ops += int(is_scan.sum())
-        g_idx = np.nonzero(w_types == OpKind.GET)[0] + lo
+                stats.scan_blocks += int(res.reads[is_scan].sum())
+                stats.scan_ops += int(is_scan.sum())
+                stats.ops += int(is_scan.sum())
+        g_idx = idx[w_types == OpKind.GET]
         service[g_idx] += get_reads[g_idx] * block_t
         w_sc = np.nonzero(w_types == OpKind.SCAN)[0]
         if w_sc.shape[0]:
-            s_idx = w_sc + lo
+            s_idx = idx[w_sc]
             # Modern-iterator latency model: the per-level/per-L0-file
             # seeks are issued CONCURRENTLY (RocksDB async_io-style, NVMe
             # queue depth), so a scan pays ONE seek wave of io_latency,
@@ -475,9 +635,9 @@ class Simulator:
                                + delivered / self.device.read_bw
                                + get_probed[s_idx] * SCAN_FILE_CPU)
         # incremental Lindley: D_j = S_j + max(D_prev, max_k(a_k - S_{k-1}))
-        s = service[sl].astype(np.float64)
+        s = service[idx].astype(np.float64)
         s_cum = np.cumsum(s)
-        a = arrivals[sl].astype(np.float64)
+        a = arrivals[idx].astype(np.float64)
         shifted = np.empty_like(s_cum)
         shifted[0] = 0.0
         shifted[1:] = s_cum[:-1]

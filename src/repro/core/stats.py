@@ -12,6 +12,7 @@ Every quantity the paper plots is derived from these counters:
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 
@@ -225,6 +226,27 @@ class Stats:
         })
         return out
 
+    def merge_from(self, other: "Stats") -> "Stats":
+        """Accumulate another ledger into this one (fleet aggregation):
+        numeric counters add, chain ledgers concatenate (chain ids are
+        process-global so the merged index stays collision-free), per-level
+        dicts merge-add.  Returns self."""
+        for f in dataclasses.fields(Stats):
+            if f.name in ("chains", "chain_index",
+                          "compactions_per_level", "level_bytes_moved"):
+                continue
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        self.chains.extend(other.chains)
+        self.chain_index.update(other.chain_index)
+        for lvl, n in other.compactions_per_level.items():
+            self.compactions_per_level[lvl] = \
+                self.compactions_per_level.get(lvl, 0) + n
+        for lvl, b in other.level_bytes_moved.items():
+            self.level_bytes_moved[lvl] = \
+                self.level_bytes_moved.get(lvl, 0) + b
+        return self
+
     def note_compaction(self, level: int, bytes_moved: int) -> None:
         self.compactions_per_level[level] = self.compactions_per_level.get(level, 0) + 1
         self.level_bytes_moved[level] = self.level_bytes_moved.get(level, 0) + bytes_moved
@@ -250,4 +272,89 @@ class Stats:
                 "tombstones_dropped": self.tombstones_dropped,
                 "tombstones_live": self.tombstones_live,
             })
+        return out
+
+
+class FleetStats:
+    """Read-only fleet-wide view over a sharded store's per-shard ledgers.
+
+    Each shard's :class:`LSMTree` writes into its OWN :class:`Stats`
+    (per-shard observability stays first-class); this wrapper aggregates
+    them on demand into the familiar ``Stats`` read API — ``io_amp``,
+    ``chains``, ``summary()``, ``chain_report()``, … all delegate to a
+    freshly merged snapshot, so a `FleetStats` can stand wherever a
+    ``Stats`` is only *read*.  Writes are refused (``__setattr__``): the
+    DES and the trees must mutate the owning shard's ledger directly, or
+    fleet counters would silently land in a throwaway snapshot.
+    """
+
+    def __init__(self, shards: list[Stats]):
+        object.__setattr__(self, "shards", list(shards))
+
+    def __setattr__(self, name, value):
+        raise AttributeError(
+            "FleetStats is a read-only aggregate; mutate the per-shard "
+            "Stats (FleetStats.shards[i]) instead")
+
+    def merged(self) -> Stats:
+        """A fresh Stats holding the fleet-wide aggregate (counters
+        summed, chain ledgers concatenated shard-major)."""
+        out = Stats()
+        for st in self.shards:
+            out.merge_from(st)
+        return out
+
+    # Stats methods that mutate their receiver: reached through
+    # __getattr__ they would operate on the throwaway merged snapshot
+    # and vanish silently, so refuse them like attribute writes.
+    _MUTATORS = frozenset({"note_compaction", "record_chain", "merge_from"})
+
+    def __getattr__(self, name):
+        # every Stats read (property, counter, or method) via the merged
+        # snapshot; AttributeError propagates naturally for unknown names
+        if name in FleetStats._MUTATORS:
+            raise AttributeError(
+                f"Stats.{name} mutates its receiver; call it on the "
+                f"owning shard's Stats (FleetStats.shards[i]), not the "
+                f"read-only aggregate")
+        return getattr(self.merged(), name)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    def per_shard_summary(self) -> list[dict]:
+        """One ``Stats.summary()`` row per shard, shard order."""
+        return [st.summary() for st in self.shards]
+
+    def chain_report(self) -> dict:
+        """Fleet chain observatory: the merged distributions plus a
+        ``per_shard`` breakdown (chain counts + attributed stall per
+        shard) — the cross-shard interference signal: ONE hot shard's
+        chains soaking up the stall attribution while every shard's
+        reads ride the same busy device."""
+        out = self.merged().chain_report()
+        out["per_shard"] = [
+            {
+                "shard": s,
+                "n_chains": len(st.l0_chains),
+                "n_background_chains": len(st.chains) - len(st.l0_chains),
+                "stall_attributed_s": round(
+                    sum(c.stall_s for c in st.chains), 4),
+                "io_amp": round(st.io_amp, 2),
+            }
+            for s, st in enumerate(self.shards)
+        ]
+        return out
+
+    def summary(self) -> dict:
+        out = self.merged().summary()
+        user = [st.user_bytes for st in self.shards]
+        total = sum(user)
+        if total:
+            # write-load-balance signal: hottest shard's share of user
+            # bytes, whole run (1/n_shards = perfectly balanced).  Named
+            # apart from shard_sweep's hot_shard_frac, which is the
+            # hottest shard's share of measured-phase OPS.
+            out["hot_shard_bytes_frac"] = round(max(user) / total, 3)
         return out

@@ -250,6 +250,19 @@ class LSMConfig:
     # switch (numpy by default); "jnp" / "pallas" pin this store's manifest
     # queries to the array backends (parity-tested drop-ins).
     index_backend: str | None = None
+    # --- sharding (repro.core.shard) --------------------------------------
+    # Number of independent per-shard LSM trees the keyspace is partitioned
+    # over.  1 = the single-tree engine (byte-identical to the pre-sharding
+    # code); N > 1 = ShardedStore routing + per-shard foreground queues in
+    # the DES, all contending for ONE shared DeviceModel.
+    n_shards: int = 1
+    # Keyspace partitioner: "hash" (splitmix64 key mix, the default — load
+    # spreads but ranges scatter) or "range" (contiguous key stripes over
+    # [0, shard_key_space) — range-friendly, skew-prone).
+    shard_router: str = "hash"
+    # Upper bound of the key domain the range router stripes (the hash
+    # router ignores it).  Matches bench_kv.workloads.KEYSPACE.
+    shard_key_space: int = 1 << 48
     # Chain-aware background scheduling: the DES's compaction pool orders
     # each drained batch by chain-head urgency (L0-pressure-relieving
     # chains first — RocksDB low-pri semantics; the policy object's
@@ -266,6 +279,9 @@ class LSMConfig:
         # normalize legacy Policy enum members to their registry name
         object.__setattr__(self, "policy",
                            getattr(self.policy, "value", self.policy))
+        assert self.n_shards >= 1, "n_shards must be >= 1"
+        assert self.shard_router in ("hash", "range"), \
+            f"unknown shard_router {self.shard_router!r} (hash|range)"
 
     # ----------------------------------------------------------------------
     @property

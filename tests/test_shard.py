@@ -1,0 +1,329 @@
+"""Sharding layer: routing partition, gather order, single-shard parity.
+
+The contract pinned here:
+
+* ``ShardRouter`` is a *partition*: every key maps to exactly one shard
+  in ``[0, n_shards)``, deterministically, for both router kinds;
+* ``ShardedStore(n_shards=1)`` is **byte-identical** to a bare
+  ``LSMTree`` driven with the same seal-on-full cadence — merged_view,
+  GET accounting (seqs/reads/probed), SCAN payloads, and the chain
+  ledger all match, for every registered policy;
+* re-gather preserves arrival order: results land at their op's
+  position regardless of how sub-batches interleaved across shards;
+* multi-shard semantics: the union of the shards is the store (same
+  live keys / scan windows as a single tree), and one hot shard's
+  background work inflates the other shard's foreground reads through
+  the shared device (the cross-shard interference mechanism).
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+import repro.core.lsm as lsm_mod
+import repro.core.sst as sst_mod
+from repro.core import (DeviceModel, FleetStats, LSMConfig, LSMTree, OpKind,
+                        RequestBatch, ShardRouter, ShardedStore, Simulator,
+                        get_policy, policies)
+
+SCALE = 1 << 17
+LAM = SCALE / (64 << 20)
+
+
+def _reset_counters():
+    """Fresh process-global uid counters: bloom FP hashing mixes sst.uid
+    and the ledger compares job/chain uids across runs."""
+    sst_mod._ids = itertools.count()
+    lsm_mod._job_ids = itertools.count()
+    lsm_mod._chain_ids = itertools.count()
+
+
+# ----------------------------------------------------------------- router
+@pytest.mark.parametrize("kind", ["hash", "range"])
+@pytest.mark.parametrize("n_shards", [1, 2, 4, 7])
+def test_router_is_a_partition(kind, n_shards):
+    r = ShardRouter(n_shards, kind)
+    keys = np.random.default_rng(3).integers(0, 1 << 48, 20_000,
+                                             dtype=np.int64)
+    s = r.shard_of(keys)
+    assert s.shape == keys.shape
+    assert (s >= 0).all() and (s < n_shards).all()
+    # deterministic (same keys -> same shards), and a FUNCTION of the key:
+    # duplicated keys route identically
+    assert (r.shard_of(keys) == s).all()
+    dup = np.concatenate([keys, keys])
+    sd = r.shard_of(dup)
+    assert (sd[:20_000] == sd[20_000:]).all()
+    if n_shards > 1:
+        # every shard actually receives load on a uniform keyspace
+        assert np.unique(s).shape[0] == n_shards
+
+
+def test_range_router_stripes_contiguously():
+    r = ShardRouter(4, "range", key_space=1 << 20)
+    keys = np.arange(0, 1 << 20, 997, dtype=np.int64)
+    s = r.shard_of(keys)
+    # non-decreasing along the key order — contiguous stripes
+    assert (np.diff(s) >= 0).all()
+    assert s[0] == 0 and s[-1] == 3
+
+
+def test_hash_router_scatters_ranges():
+    r = ShardRouter(4, "hash")
+    s = r.shard_of(np.arange(1000, dtype=np.int64))
+    # a contiguous key range spreads over every shard
+    counts = np.bincount(s, minlength=4)
+    assert (counts > 100).all()
+
+
+# ------------------------------------------------- single-shard parity
+def _drive_tree(cfg: LSMConfig, ops):
+    """Reference driver: a bare LSMTree fed the same op stream with the
+    seal-on-full cadence ShardedStore uses (chunk at memtable room; a
+    full memtable rolls through flush + background triggers)."""
+    tree = LSMTree(cfg)
+    results = []
+    for kind, payload in ops:
+        if kind == "write":
+            keys, tombs = payload
+            i, n = 0, keys.shape[0]
+            while i < n:
+                if tree.memtable.room == 0:
+                    tree.seal_memtable()
+                    tree.flush_immutable()
+                    tree.background_triggers()
+                    tree.drain_jobs()
+                take = min(tree.memtable.room, n - i)
+                tree._write_batch(keys[i:i + take], tombs[i:i + take])
+                i += take
+                if tree.memtable.full:
+                    tree.seal_memtable()
+                    tree.flush_immutable()
+                    tree.background_triggers()
+                    tree.drain_jobs()
+        elif kind == "get":
+            results.append(tree.apply_batch(RequestBatch.gets(payload)))
+        else:
+            starts, lens = payload
+            results.append(tree.apply_batch(RequestBatch.scans(starts, lens)))
+    return tree, results
+
+
+def _drive_store(cfg: LSMConfig, ops):
+    store = ShardedStore(cfg)
+    results = []
+    for kind, payload in ops:
+        if kind == "write":
+            keys, tombs = payload
+            kinds = np.where(tombs, np.uint8(OpKind.DELETE),
+                             np.uint8(OpKind.PUT))
+            store.apply_batch(RequestBatch(kinds, keys))
+        elif kind == "get":
+            results.append(store.apply_batch(RequestBatch.gets(payload)))
+        else:
+            starts, lens = payload
+            results.append(store.apply_batch(
+                RequestBatch.scans(starts, lens)))
+    return store, results
+
+
+def _mixed_ops(seed=5, n_writes=6_000):
+    r = np.random.default_rng(seed)
+    pool = r.integers(0, 1 << 40, n_writes, dtype=np.int64)
+    ops = []
+    for lo in range(0, n_writes, 1_000):
+        chunk = pool[lo:lo + 1_000]
+        tombs = r.random(chunk.shape[0]) < 0.05
+        ops.append(("write", (chunk, tombs)))
+        ops.append(("get", r.choice(pool[:lo + 1_000], 300)))
+        starts = r.choice(pool[:lo + 1_000], 5)
+        lens = r.integers(1, 40, 5).astype(np.int32)
+        ops.append(("scan", (starts, lens)))
+    return ops
+
+
+@pytest.mark.parametrize("pname", policies.names())
+def test_single_shard_store_byte_identical_to_tree(pname):
+    """ShardedStore(n_shards=1) == bare LSMTree: merged_view, GET
+    accounting, SCAN payloads, chain ledger — per registered policy."""
+    cfg = get_policy(pname).default_config(scale=SCALE)
+    ops = _mixed_ops()
+    _reset_counters()
+    tree, t_res = _drive_tree(cfg, ops)
+    _reset_counters()
+    store, s_res = _drive_store(cfg.with_(n_shards=1), ops)
+
+    assert store.merged_view() == tree.merged_view()
+    assert len(s_res) == len(t_res)
+    for tr, sr in zip(t_res, s_res):
+        np.testing.assert_array_equal(sr.seqs, tr.seqs)
+        np.testing.assert_array_equal(sr.reads, tr.reads)
+        np.testing.assert_array_equal(sr.probed, tr.probed)
+        np.testing.assert_array_equal(sr.scan_offsets, tr.scan_offsets)
+        np.testing.assert_array_equal(sr.scan_keys, tr.scan_keys)
+        np.testing.assert_array_equal(sr.scan_seqs, tr.scan_seqs)
+    # the chain ledger replays identically (ids, shape, job uids)
+    t_chains = tree.stats.chains
+    s_chains = store.stats.chains
+    assert len(s_chains) == len(t_chains)
+    for tc, sc in zip(t_chains, s_chains):
+        assert (sc.chain_id, sc.trigger, sc.length, sc.width,
+                sc.width_bytes, sc.n_jobs, sc.job_uids) == \
+               (tc.chain_id, tc.trigger, tc.length, tc.width,
+                tc.width_bytes, tc.n_jobs, tc.job_uids)
+
+
+# --------------------------------------------------- multi-shard routing
+def test_store_partition_and_gather_order():
+    """Every key lives in exactly one shard; results re-gather at their
+    arrival positions regardless of shard interleaving."""
+    cfg = LSMConfig.vlsm_default(scale=SCALE).with_(n_shards=4)
+    store = ShardedStore(cfg)
+    r = np.random.default_rng(11)
+    keys = np.unique(r.integers(0, 1 << 40, 5_000, dtype=np.int64))
+    store.put_batch(keys)
+    views = [t.merged_view() for t in store.shards]
+    sizes = [len(v) for v in views]
+    # partition: the shard views are disjoint and their union is the store
+    assert sum(sizes) == keys.shape[0]
+    union = set()
+    for v in views:
+        assert not (union & v.keys())
+        union |= v.keys()
+    assert union == set(keys.tolist())
+    # routing agreement: each key sits in the shard the router names
+    sid = store.shard_of(keys)
+    for s in range(4):
+        assert set(keys[sid == s].tolist()) == set(views[s].keys())
+    # gather order: shuffled GETs answer at their own positions
+    probe = r.permutation(keys)[:1_000]
+    seqs, _reads, _probed = store.get_batch(probe)
+    expect = store.merged_view()
+    assert [expect[int(k)] for k in probe.tolist()] == seqs.tolist()
+
+
+def test_multi_shard_semantics_match_single_tree():
+    """Liveness and scan windows are shard-count-invariant (seqnos are
+    per-shard, so compare user-visible keys, not seq values)."""
+    r = np.random.default_rng(13)
+    keys = np.unique(r.integers(0, 1 << 40, 4_000, dtype=np.int64))
+    dead = keys[r.random(keys.shape[0]) < 0.1]
+    cfg1 = LSMConfig.vlsm_default(scale=SCALE)
+    stores = []
+    for n in (1, 4):
+        st = ShardedStore(cfg1.with_(n_shards=n))
+        st.put_batch(keys)
+        if dead.size:
+            st.delete_batch(dead)
+        stores.append(st)
+    v1, v4 = (set(s.merged_view().keys()) for s in stores)
+    assert v1 == v4
+    starts = r.choice(keys, 8)
+    lens = np.full(8, 25, np.int32)
+    r1 = stores[0].scan_batch(starts, lens)
+    r4 = stores[1].scan_batch(starts, lens)
+    np.testing.assert_array_equal(r1.scan_keys, r4.scan_keys)
+    np.testing.assert_array_equal(r1.scan_offsets, r4.scan_offsets)
+
+
+# ------------------------------------------------------------- DES level
+def test_sim_shards_partition_ops_and_stats():
+    cfg = LSMConfig.vlsm_default(scale=SCALE).with_(n_shards=3)
+    sim = Simulator(cfg, DeviceModel.scaled(LAM))
+    n = 30_000
+    keys = np.random.default_rng(7).integers(0, 1 << 44, n, dtype=np.int64)
+    res = sim.run(np.zeros(n, np.uint8), keys, np.arange(n) / 5e3)
+    assert res.shard_ids is not None
+    np.testing.assert_array_equal(res.shard_ids,
+                                  sim.router.shard_of(keys))
+    rows = res.per_shard_summary()
+    assert len(rows) == 3 and sum(r["ops"] for r in rows) == n
+    # per-shard ledgers: fleet counters are the shard sums
+    assert isinstance(res.stats, FleetStats)
+    assert res.stats.user_bytes == sum(st.user_bytes
+                                       for st in sim.shard_stats)
+    assert res.stats.flush_bytes == sum(st.flush_bytes
+                                        for st in sim.shard_stats)
+    # every job is stamped with the shard whose tree emitted it
+    shards_seen = {j.shard for j in sim.job_log}
+    assert shards_seen == {0, 1, 2}
+    for j in sim.job_log:
+        assert j.chain_id in sim.shard_stats[j.shard].chain_index or \
+            j.kind == "flush"
+    # the fleet chain report carries the per-shard breakdown
+    rep = res.chain_report()
+    assert len(rep["per_shard"]) == 3
+    assert sum(p["n_chains"] for p in rep["per_shard"]) == rep["n_chains"]
+
+
+def test_fleet_stats_read_only():
+    fs = FleetStats([lsm_mod.Stats(), lsm_mod.Stats()])
+    with pytest.raises(AttributeError):
+        fs.user_bytes = 7
+
+
+def test_hot_shard_inflates_cold_shard_reads():
+    """Cross-shard interference: a write-hot shard's compactions run on
+    the SHARED device, so the cold shard's GETs get slower even though
+    its own tree is idle — the tail-interference mechanism shard_sweep
+    measures."""
+    cfg = LSMConfig.vlsm_default(scale=SCALE).with_(
+        n_shards=2, shard_router="range", shard_key_space=1 << 40)
+    r = np.random.default_rng(23)
+    half = 1 << 39
+    cold_keys = np.unique(r.integers(half, 1 << 40, 4_000, dtype=np.int64))
+    hot_keys = r.integers(0, half, 40_000, dtype=np.int64)
+    probe = r.choice(cold_keys, 4_000)
+
+    def run(with_hot: bool):
+        sim = Simulator(cfg, DeviceModel.scaled(LAM))
+        # preload the cold shard, then measured GETs against it at a
+        # fixed rate, with (or without) a concurrent write flood to the
+        # hot shard
+        ops = [np.zeros(cold_keys.shape[0], np.uint8),
+               np.ones(probe.shape[0], np.uint8)]
+        key_arr = [cold_keys, probe]
+        arr = [np.arange(cold_keys.shape[0]) / 1e6]
+        t0 = arr[0][-1] + 1.0
+        arr.append(t0 + np.arange(probe.shape[0]) / 2e3)
+        if with_hot:
+            ops.append(np.zeros(hot_keys.shape[0], np.uint8))
+            key_arr.append(hot_keys)
+            arr.append(t0 + np.arange(hot_keys.shape[0]) / 20e3)
+        op_types = np.concatenate(ops)
+        keys = np.concatenate(key_arr)
+        arrivals = np.concatenate(arr)
+        order = np.argsort(arrivals, kind="stable")
+        res = sim.run(op_types[order], keys[order], arrivals[order])
+        gets = res.op_types == OpKind.GET
+        return float(np.percentile(res.latency[gets], 99))
+
+    assert run(True) > run(False)
+
+
+# -------------------------------------------------------- satellite: CLI
+def test_db_bench_unknown_names_exit_cleanly(capsys):
+    """Unknown --policy / --bench names exit via argparse with the
+    registered list, not a KeyError traceback."""
+    from repro.bench_kv.db_bench import main
+    with pytest.raises(SystemExit) as e:
+        main(["--policy", "nope", "--json", ""])
+    assert e.value.code == 2
+    err = capsys.readouterr().err
+    assert "registered" in err and "vlsm" in err
+    with pytest.raises(SystemExit) as e:
+        main(["--bench", "nope", "--json", ""])
+    assert e.value.code == 2
+    err = capsys.readouterr().err
+    assert "available" in err and "shard_sweep" in err
+
+
+def test_summary_has_p999_fields():
+    cfg = LSMConfig.vlsm_default(scale=SCALE)
+    sim = Simulator(cfg, DeviceModel.scaled(LAM))
+    n = 5_000
+    keys = np.random.default_rng(3).integers(0, 1 << 40, n, dtype=np.int64)
+    out = sim.run(np.zeros(n, np.uint8), keys, np.arange(n) / 2e3).summary()
+    for k in ("p999_ms", "p999_put_ms", "p999_get_ms"):
+        assert k in out
