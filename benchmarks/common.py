@@ -9,6 +9,7 @@ paper SST ↦ SCALE/8 bytes here).
 from __future__ import annotations
 
 import sys
+import time
 from pathlib import Path
 
 SRC = Path(__file__).resolve().parents[1] / "src"
@@ -73,7 +74,19 @@ def load_at_fraction(cfg: LSMConfig, frac: float = 0.6, n: int = 50_000):
 
 ROWS: list[dict] = []
 
+_last_emit_t = [time.perf_counter()]
+
 
 def emit(name: str, value, derived: str = "") -> None:
-    ROWS.append({"name": name, "value": value, "derived": derived})
+    """Record one result row (and print it as CSV).
+
+    Every row carries ``wall_clock_s`` — the wall time since the previous
+    ``emit`` (since import for the first row): roughly what the
+    measurement that produced the row cost.  Rows accumulate in ``ROWS``
+    for ``--json`` persistence.
+    """
+    now = time.perf_counter()
+    wall, _last_emit_t[0] = now - _last_emit_t[0], now
+    ROWS.append({"name": name, "value": value, "derived": derived,
+                 "wall_clock_s": round(wall, 3)})
     print(f"{name},{value},{derived}", flush=True)

@@ -24,6 +24,8 @@ def main() -> None:
                     help="compaction policy name(s) for the db_bench "
                          "section, comma-separated, or 'all' — resolved "
                          "from the repro.core.policies registry")
+    ap.add_argument("--seed", type=int, default=7,
+                    help="base RNG seed for the db_bench-backed sections")
     args = ap.parse_args()
 
     from . import fig_benchmarks as fb
@@ -51,9 +53,9 @@ def main() -> None:
         for dist in ("uniform", "pareto"):
             for nm in chosen:
                 cfg = get_policy(nm).default_config(scale=SCALE)
-                run = fill_sim(cfg, 60_000, dist, SCALE)
+                run = fill_sim(cfg, 60_000, dist, SCALE, args.seed)
                 row = fillrandom(cfg, 60_000, dist=dist, scale=SCALE,
-                                 run=run)
+                                 seed=args.seed, run=run)
                 emit(f"db_bench.{dist}.io_amp.{nm}", row["io_amp"],
                      f"levels={row['levels_filled']}")
                 if dist != "uniform":
@@ -61,7 +63,8 @@ def main() -> None:
                 # chain observatory off the SAME simulation (paper §3;
                 # full distributions live in db_bench's chain_report
                 # rows — see docs/benchmarks.md)
-                crow = chain_report(cfg, 60_000, scale=SCALE, run=run)
+                crow = chain_report(cfg, 60_000, scale=SCALE,
+                                    seed=args.seed, run=run)
                 emit(f"db_bench.chain.mean_width_ssts.{nm}",
                      crow.get("mean_width_ssts", 0.0),
                      f"eff_len={crow.get('effective_length', 0.0)}")
@@ -81,19 +84,46 @@ def main() -> None:
                 cfg = get_policy(nm).default_config(scale=SCALE) \
                     .with_(n_shards=k)
                 row = shard_sweep(cfg, 20_000, 30_000, scale=SCALE,
-                                  rate=SWEEP_RATE)
+                                  rate=SWEEP_RATE, seed=args.seed)
                 emit(f"db_bench.shard_sweep.p99_get_ms.{nm}.x{k}",
                      row["p99_get_ms"], f"p999={row['p999_get_ms']}")
             cfg = get_policy(nm).default_config(scale=SCALE) \
                 .with_(n_shards=HOT_SHARDS, shard_router="range")
             row = shard_sweep(cfg, 20_000, 30_000, dist="zipf_ranked",
-                              scale=SCALE, rate=HOT_RATE)
+                              scale=SCALE, rate=HOT_RATE, seed=args.seed)
             emit(f"db_bench.shard_hot.p99_get_ms.{nm}.x{HOT_SHARDS}",
                  row["p99_get_ms"],
                  f"hot_frac={row['hot_shard_frac']};"
                  f"stall_s={row['stall_total_s']}")
     except Exception as e:  # pragma: no cover
         print(f"# shard_sweep skipped: {e}")
+    # batched fleet engine: the policy × shard × rate matrix as one
+    # structural replay per point + batched Lindley accounting, with the
+    # serial heap loop as timed baseline and parity oracle (full-size
+    # matrix lives in db_bench's fleet_sweep rows — see docs/benchmarks.md)
+    try:
+        from repro.bench_kv.db_bench import (FLEET_RATES_QUICK,
+                                             fleet_sweep_bench)
+        from repro.core.policies import resolve_names
+        from .common import SCALE, emit
+        frows = fleet_sweep_bench(resolve_names(args.policy), 6_000, 8_000,
+                                  scale=SCALE, rates=FLEET_RATES_QUICK,
+                                  shard_counts=(1, 4), seed=args.seed)
+        summary = frows[-1]
+        emit("db_bench.fleet_sweep.speedup", summary["speedup"],
+             f"runs={summary['runs']};"
+             f"fleet_wall_s={summary['fleet_wall_s']}")
+        emit("db_bench.fleet_sweep.parity_max_abs_latency_s",
+             summary["parity_max_abs_latency_s"],
+             f"stalls_equal={summary['parity_stalls_equal']}")
+        top_rate = max(r["rate_ops_s"] for r in frows[:-1])
+        for row in frows[:-1]:
+            if row["rate_ops_s"] == top_rate:
+                emit(f"db_bench.fleet_sweep.p99_get_ms."
+                     f"{row['policy']}.x{row['n_shards']}",
+                     row["p99_get_ms"], f"rate={row['rate_ops_s']}")
+    except Exception as e:  # pragma: no cover
+        print(f"# fleet_sweep skipped: {e}")
     # serving-integration tail benchmark
     try:
         from .serving_tail import bench_serving_tail

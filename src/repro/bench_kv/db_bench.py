@@ -262,6 +262,55 @@ def ycsb_a(cfg: LSMConfig, n_ops: int = 60_000, n_pop: int = 60_000, *,
     }
 
 
+def _sweep_row(cfg: LSMConfig, res, *, n_ops: int, n_load: int, rate: float,
+               dist: str, wall: float, bench: str = "shard_sweep") -> dict:
+    """Build one shard_sweep-schema row from a :class:`SimResult` alone
+    (works for the serial engine and for fleet temporal passes: stall
+    events and per-shard chain snapshots ride on the result)."""
+    run_lat = res.latency[n_load:]
+    run_types = res.op_types[n_load:]
+    shard_ids = res.shard_ids if res.shard_ids is not None \
+        else np.zeros(res.op_types.shape[0], np.int64)
+    run_shards = shard_ids[n_load:]
+    get_lat = run_lat[run_types == OpKind.GET]
+    put_lat = run_lat[run_types == OpKind.PUT]
+    run_stalls = [d for i, d in res.stall_events if i >= n_load]
+    per_shard = []
+    for s in range(cfg.n_shards):
+        m = run_shards == s
+        gl = run_lat[m & (run_types == OpKind.GET)]
+        s_stalls = [d for i, d in res.stall_events
+                    if i >= n_load and shard_ids[i] == s]
+        per_shard.append({
+            "shard": s,
+            "ops": int(m.sum()),
+            "p99_get_ms": round(float(np.percentile(gl, 99)) * 1e3, 3)
+            if gl.size else 0.0,
+            "stall_s": round(sum(s_stalls), 4),
+            # write-stop time the DES pinned on this shard's chains
+            # (whole run: chains are load-born but stall the run phase)
+            "chain_stall_s": round(res.chain_stall_s[s], 4),
+            "n_chains": res.chain_counts[s],
+        })
+    run_ops = np.array([p["ops"] for p in per_shard], np.float64)
+    return {
+        "bench": bench, "workload": "run_a", "dist": dist,
+        "policy": cfg.policy, "n_shards": cfg.n_shards,
+        "router": cfg.shard_router, "ops": n_ops, "rate_ops_s": int(rate),
+        "p99_get_ms": round(float(np.percentile(get_lat, 99)) * 1e3, 3),
+        "p999_get_ms": round(float(np.percentile(get_lat, 99.9)) * 1e3, 3),
+        "p99_put_ms": round(float(np.percentile(put_lat, 99)) * 1e3, 3),
+        "p999_put_ms": round(float(np.percentile(put_lat, 99.9)) * 1e3, 3),
+        "stall_total_s": round(sum(run_stalls), 4),
+        "n_stalls": len(run_stalls),
+        "io_amp": round(res.stats.io_amp, 2),
+        "hot_shard_frac": round(
+            float(run_ops.max() / max(1.0, run_ops.sum())), 3),
+        "per_shard": per_shard,
+        "wall_clock_s": round(wall, 3),
+    }
+
+
 def shard_sweep(cfg: LSMConfig, n_ops: int = 30_000, n_pop: int = 40_000, *,
                 dist: str = "uniform", scale: int | None = None,
                 rate: float = 2_500.0, settle_s: float = 10.0,
@@ -296,55 +345,117 @@ def shard_sweep(cfg: LSMConfig, n_ops: int = 30_000, n_pop: int = 40_000, *,
     t0 = time.perf_counter()
     res = sim.run(op_types, keys, arrivals)
     wall = time.perf_counter() - t0
+    return _sweep_row(cfg, res, n_ops=n_ops, n_load=pop.shape[0],
+                      rate=rate, dist=dist, wall=wall)
+
+
+def fleet_sweep_bench(policies: list[str], n_ops: int = 30_000,
+                      n_pop: int = 40_000, *, dist: str = "uniform",
+                      scale: int | None = None,
+                      rates: tuple[float, ...] = None,
+                      shard_counts: tuple[int, ...] = None,
+                      settle_s: float = 10.0, seed: int = 7,
+                      backend: str = "numpy",
+                      serial_baseline: bool = True) -> list[dict]:
+    """Policy × shard-count × arrival-rate matrix through the batched
+    fleet engine (``repro.core.fleet``), with the serial heap-loop as
+    timed baseline and parity oracle.
+
+    Every (policy, shard count) point shares ONE structural replay; each
+    rate on the load curve is a cheap temporal pass over it, and the
+    whole matrix's latency accounting is batched Lindley programs over
+    every (point, rate, shard) queue.  The serial baseline replays the
+    full heap loop per (point, rate) — the paper-methodology cost of
+    sweeping a fixed-rate load curve one run at a time.
+
+    Emits one ``shard_sweep``-schema row per (point, rate) with
+    ``bench="fleet_sweep"``/``engine="fleet"`` (``wall_clock_s`` is the
+    fleet matrix wall amortized per run), then a summary row with the
+    matrix walls, the measured speedup and the worst per-op latency
+    parity gap against the serial oracle.
+
+    ``backend`` picks the batched Lindley implementation ("numpy" by
+    default: XLA's CPU scan lowering is ~20x slower than numpy's
+    axis-1 accumulate on this tier; "jnp"/"pallas" are the device
+    paths, parity-asserted in the kernel tests).
+    """
+    from repro.core import SweepPoint, fleet_sweep, serial_sweep
+    if rates is None:
+        rates = FLEET_RATES
+    if shard_counts is None:
+        shard_counts = FLEET_SHARD_COUNTS
+    scale = scale or (1 << 18)
+    lam = scale / (64 << 20)
+    device = DeviceModel.scaled(lam)
+    pop = np.unique(load_keys(n_pop, seed))
+    spec = make_run_a(pop, n_ops, dist=dist)
     n_load = pop.shape[0]
-    run_lat = res.latency[n_load:]
-    run_types = res.op_types[n_load:]
-    shard_ids = res.shard_ids if res.shard_ids is not None \
-        else np.zeros(op_types.shape[0], np.int64)
-    run_shards = shard_ids[n_load:]
-    get_lat = run_lat[run_types == OpKind.GET]
-    put_lat = run_lat[run_types == OpKind.PUT]
-    run_stalls = _run_phase_stalls(sim, n_load)
-    per_shard = []
-    for s in range(cfg.n_shards):
-        m = run_shards == s
-        gl = run_lat[m & (run_types == OpKind.GET)]
-        s_stalls = [d for i, d in sim.stall_events
-                    if i >= n_load and shard_ids[i] == s]
-        per_shard.append({
-            "shard": s,
-            "ops": int(m.sum()),
-            "p99_get_ms": round(float(np.percentile(gl, 99)) * 1e3, 3)
-            if gl.size else 0.0,
-            "stall_s": round(sum(s_stalls), 4),
-            # write-stop time the DES pinned on this shard's chains
-            # (whole run: chains are load-born but stall the run phase)
-            "chain_stall_s": round(
-                sum(c.stall_s for c in sim.shard_stats[s].chains), 4),
-            "n_chains": len(sim.shard_stats[s].chains),
-        })
-    run_ops = np.array([p["ops"] for p in per_shard], np.float64)
-    return {
-        "bench": "shard_sweep", "workload": "run_a", "dist": dist,
-        "policy": cfg.policy, "n_shards": cfg.n_shards,
-        "router": cfg.shard_router, "ops": n_ops, "rate_ops_s": int(rate),
-        "p99_get_ms": round(float(np.percentile(get_lat, 99)) * 1e3, 3),
-        "p999_get_ms": round(float(np.percentile(get_lat, 99.9)) * 1e3, 3),
-        "p99_put_ms": round(float(np.percentile(put_lat, 99)) * 1e3, 3),
-        "p999_put_ms": round(float(np.percentile(put_lat, 99.9)) * 1e3, 3),
-        "stall_total_s": round(sum(run_stalls), 4),
-        "n_stalls": len(run_stalls),
-        "io_amp": round(sim.stats.io_amp, 2),
-        "hot_shard_frac": round(float(run_ops.max() / max(1.0, run_ops.sum())), 3),
-        "per_shard": per_shard,
-        "wall_clock_s": round(wall, 3),
+    op_types = np.concatenate([np.zeros(n_load, np.uint8), spec.op_types])
+    keys = np.concatenate([pop, spec.keys])
+    grid = []
+    for rate in rates:
+        load_arr, run_arr = _load_settle_run(n_load, n_ops, rate, settle_s)
+        grid.append(np.concatenate([load_arr, run_arr]))
+    points = [SweepPoint(label=f"{nm}/{k}",
+                         cfg=get_policy(nm).default_config(scale=scale)
+                         .with_(n_shards=k),
+                         device=device, op_types=op_types, keys=keys,
+                         arrivals_grid=grid)
+              for nm in policies for k in shard_counts]
+    n_runs = len(points) * len(rates)
+
+    t0 = time.perf_counter()
+    fleet_res = fleet_sweep(points, backend=backend)
+    t_fleet = time.perf_counter() - t0
+
+    rows = []
+    for p, per_rate in zip(points, fleet_res):
+        for rate, res in zip(rates, per_rate):
+            row = _sweep_row(p.cfg, res, n_ops=n_ops, n_load=n_load,
+                             rate=rate, dist=dist, wall=t_fleet / n_runs,
+                             bench="fleet_sweep")
+            row["engine"] = "fleet"
+            rows.append(row)
+
+    summary = {
+        "bench": "fleet_sweep", "engine": "summary", "dist": dist,
+        "policies": list(policies), "shard_counts": list(shard_counts),
+        "n_rates": len(rates), "runs": n_runs, "ops": n_ops,
+        "backend": backend,
+        "fleet_wall_s": round(t_fleet, 3),
+        "wall_clock_s": round(t_fleet, 3),
     }
+    if serial_baseline:
+        t0 = time.perf_counter()
+        serial_res = serial_sweep(points)
+        t_serial = time.perf_counter() - t0
+        dlat, stalls_eq = 0.0, True
+        for pf, ps in zip(fleet_res, serial_res):
+            for a, b in zip(pf, ps):
+                dlat = max(dlat, float(np.max(np.abs(a.latency - b.latency))))
+                stalls_eq &= (a.n_stalls == b.n_stalls)
+        summary.update({
+            "serial_wall_s": round(t_serial, 3),
+            "speedup": round(t_serial / max(t_fleet, 1e-9), 2),
+            "parity_max_abs_latency_s": float(dlat),
+            "parity_stalls_equal": bool(stalls_eq),
+            "wall_clock_s": round(t_fleet + t_serial, 3),
+        })
+    rows.append(summary)
+    return rows
 
 
 BENCHES = ("fillrandom", "read_path", "ycsb_a", "seekrandom",
-           "chain_report", "shard_sweep")
+           "chain_report", "shard_sweep", "fleet_sweep")
 SHARD_COUNTS = (1, 2, 4)      # the sweep axis (fixed aggregate rate)
 SWEEP_RATE = 5_000.0          # aggregate ops/s: stresses x1, easy at x4
+# fleet_sweep: the batched-engine matrix — the rate axis is the paper's
+# fixed-rate load curve, swept in one structural replay per point
+FLEET_SHARD_COUNTS = (1, 2, 4, 16)
+FLEET_RATES = tuple(
+    float(r) for r in np.geomspace(1_250.0, 20_000.0, 32))
+FLEET_RATES_QUICK = tuple(
+    float(r) for r in np.geomspace(2_000.0, 8_000.0, 4))
 HOT_SHARDS = 4                # shard count of the Zipf hot-shard scenario
 HOT_RATE = 14_000.0           # hot scenario rate: the hot shard saturates
                               # and write-stops while its chains keep the
@@ -364,7 +475,10 @@ def main(argv=None):
     ap.add_argument("--bench", default="all",
                     help="bench name(s), comma-separated, or 'all' "
                          f"(available: {', '.join(BENCHES)})")
+    ap.add_argument("--seed", type=int, default=7,
+                    help="base RNG seed for every workload (default 7)")
     args = ap.parse_args(argv)
+    seed = args.seed
     if args.bench == "all":
         benches = set(BENCHES)
     else:
@@ -404,29 +518,32 @@ def main(argv=None):
         for dist in ("uniform", "pareto"):
             for name in chosen:
                 cfg = cfg_for(name)
-                run = fill_sim(cfg, n_fill, dist, scale)
+                run = fill_sim(cfg, n_fill, dist, scale, seed)
                 if dist == "uniform":
                     fill_runs[name] = (cfg, run)
                 row = fillrandom(cfg, n_fill, dist=dist, scale=scale,
-                                 run=run)
+                                 seed=seed, run=run)
                 rows.append(row)
                 print(f"db_bench.{dist}.{name}: {row}")
     if "read_path" in benches:
         for name in chosen:
-            row = read_path(cfg_for(name), n_read, n_pop, scale=scale)
+            row = read_path(cfg_for(name), n_read, n_pop, scale=scale,
+                            seed=seed)
             rows.append(row)
             print(f"db_bench.read_path.{name}: {row}")
     # ycsb_a: mixed read/update tails for every policy at the same memory
     # budget (same `scale`) and the same request rate.
     if "ycsb_a" in benches:
         for name in chosen:
-            row = ycsb_a(cfg_for(name), n_mixed, n_mixed_pop, scale=scale)
+            row = ycsb_a(cfg_for(name), n_mixed, n_mixed_pop, scale=scale,
+                         seed=seed)
             rows.append(row)
             print(f"db_bench.ycsb_a.{name}: {row}")
     # seekrandom / YCSB-E: scan tails for every policy.
     if "seekrandom" in benches:
         for name in chosen:
-            row = seekrandom(cfg_for(name), n_scan, n_scan_pop, scale=scale)
+            row = seekrandom(cfg_for(name), n_scan, n_scan_pop, scale=scale,
+                             seed=seed)
             rows.append(row)
             print(f"db_bench.seekrandom.{name}: {row}")
     # chain_report: the chain observatory — width/length/critical-path
@@ -435,7 +552,7 @@ def main(argv=None):
     if "chain_report" in benches:
         for name in chosen:
             cfg, run = fill_runs.get(name) or (cfg_for(name), None)
-            row = chain_report(cfg, n_fill, scale=scale, run=run)
+            row = chain_report(cfg, n_fill, scale=scale, seed=seed, run=run)
             rows.append(row)
             print(f"db_bench.chain_report.{name}: {row}")
     # shard_sweep: fleet P99/P99.9 vs shard count at a fixed aggregate
@@ -445,7 +562,7 @@ def main(argv=None):
             for k in SHARD_COUNTS:
                 cfg = cfg_for(name).with_(n_shards=k)
                 row = shard_sweep(cfg, n_shard, n_shard_pop, scale=scale,
-                                  rate=SWEEP_RATE)
+                                  rate=SWEEP_RATE, seed=seed)
                 rows.append(row)
                 print(f"db_bench.shard_sweep.{name}.x{k}: {row}")
             # Zipf hot-shard: rank-ordered zipfian over the RANGE router
@@ -458,9 +575,22 @@ def main(argv=None):
             cfg = cfg_for(name).with_(n_shards=HOT_SHARDS,
                                       shard_router="range")
             row = shard_sweep(cfg, n_shard, n_shard_pop, dist="zipf_ranked",
-                              scale=scale, rate=HOT_RATE)
+                              scale=scale, rate=HOT_RATE, seed=seed)
             rows.append(row)
             print(f"db_bench.shard_hot.{name}.x{HOT_SHARDS}: {row}")
+    # fleet_sweep: the batched two-phase engine over the full policy x
+    # shard-count x rate matrix — one structural replay per point, one
+    # temporal pass per rate, batched Lindley for the whole matrix —
+    # timed against the serial heap-loop oracle on the same matrix.
+    if "fleet_sweep" in benches:
+        frates = FLEET_RATES_QUICK if args.quick else FLEET_RATES
+        fshards = (1, 4, 16) if args.quick else FLEET_SHARD_COUNTS
+        frows = fleet_sweep_bench(chosen, n_shard, n_shard_pop,
+                                  scale=scale, rates=frates,
+                                  shard_counts=fshards, seed=seed)
+        rows.extend(frows)
+        summ = frows[-1]
+        print(f"db_bench.fleet_sweep: {summ}")
     if args.json:
         Path(args.json).write_text(json.dumps(rows, indent=1))
         print(f"wrote {args.json} ({len(rows)} rows)")

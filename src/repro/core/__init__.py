@@ -18,6 +18,8 @@ the five seed policy names.
 """
 
 from . import policies
+from .fleet import (FleetEngine, PendingRun, SweepPoint, fleet_sweep,
+                    reset_uid_counters, serial_sweep)
 from .level_index import LevelIndex
 from .lsm import Job, LSMTree
 from .memtable import Memtable
@@ -30,8 +32,10 @@ from .types import (DeviceModel, LSMConfig, OpKind, Policy, RequestBatch,
                     ResultBatch)
 
 __all__ = [
-    "ChainRecord", "CompactionPolicy", "DeviceModel", "FleetStats", "Job",
-    "LSMConfig", "LSMTree", "LevelIndex", "Memtable", "OpKind", "Policy",
-    "RequestBatch", "ResultBatch", "SST", "ShardRouter", "ShardedStore",
-    "SimResult", "Simulator", "Stats", "get_policy", "policies",
+    "ChainRecord", "CompactionPolicy", "DeviceModel", "FleetEngine",
+    "FleetStats", "Job", "LSMConfig", "LSMTree", "LevelIndex", "Memtable",
+    "OpKind", "PendingRun", "Policy", "RequestBatch", "ResultBatch", "SST",
+    "ShardRouter", "ShardedStore", "SimResult", "Simulator", "Stats",
+    "SweepPoint", "fleet_sweep", "get_policy", "policies",
+    "reset_uid_counters", "serial_sweep",
 ]

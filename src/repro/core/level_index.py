@@ -126,6 +126,10 @@ class LevelIndex:
         self.uids = [z() for _ in range(n_levels)]
         self.bloom = [np.empty(0, np.uint64) for _ in range(n_levels)]
         self._csum: list[np.ndarray | None] = [None] * n_levels
+        # Per-level mutation counter: bumps on every structural update so
+        # derived caches (the tree's flat key/seq concatenation feeding
+        # the vectorized GET path) can invalidate lazily.
+        self.version = [0] * n_levels
 
     # ------------------------------------------------ incremental updates
     def _set(self, level: int, small, large, sizes, uids) -> None:
@@ -135,6 +139,7 @@ class LevelIndex:
         self.uids[level] = uids
         self.bloom[level] = (uids.astype(np.uint64) * _UID_MIX)
         self._csum[level] = None
+        self.version[level] += 1
 
     def refresh(self, level: int, ssts: list[SST]) -> None:
         """Bulk rebuild of one level's arrays (init / recovery path)."""

@@ -30,7 +30,7 @@ from . import merge as merge_backend
 from .level_index import LevelIndex, bloom_false_positives
 from .memtable import Memtable
 from .policies import get_policy
-from .sst import SST, split_fixed, total_size
+from .sst import SST, split_fixed, total_size, uid_allocator
 from .stats import ChainRecord, Stats
 from .types import (LSMConfig, OpKind, RequestBatch, ResultBatch,
                     seq_decode, seq_encode)
@@ -106,6 +106,20 @@ class LSMTree:
         self.pending_jobs: list[Job] = []
         # chain id the current compaction pass stamps onto emitted jobs
         self._active_chain = -1
+        # SST uid source: tree slot 0 keeps the process-global counter
+        # (preserving every single-tree uid stream, which the bloom-FP
+        # hash mixes and the read-parity capture pins); every other tree
+        # of a fleet draws from its own disjoint base so SST identity —
+        # and therefore bloom behaviour — is independent of how an engine
+        # interleaves trees in time (the heap DES and the batched fleet
+        # engine replay the same per-tree structural order, not the same
+        # global order).
+        slot = (shard_id << 12) | region_id
+        self._sst_uids = None if slot == 0 else itertools.count(slot << 40)
+        # Lazy flat concatenation of each sorted level's keys/seqs (the
+        # vectorized GET path probes a whole level with ONE searchsorted);
+        # invalidated by the LevelIndex per-level version counters.
+        self._flat: dict[int, tuple[int, np.ndarray, np.ndarray]] = {}
 
     # --------------------------------------------------- typed entry point
     def apply_batch(self, batch: RequestBatch) -> ResultBatch:
@@ -190,6 +204,10 @@ class LSMTree:
         compaction trigger.  ``flush_job`` depends on the chain's head (the
         L0 compaction) when one was needed *and* L0 was at the stop limit.
         """
+        with uid_allocator(self._sst_uids):
+            return self._flush_immutable()
+
+    def _flush_immutable(self) -> tuple[Job, list[Job]]:
         chain_jobs: list[Job] = []
         l0 = self.levels[0]
         if len(l0) >= self.cfg.l0_max_ssts:
@@ -444,6 +462,10 @@ class LSMTree:
         exceed ``soft_limit_factor`` × target — trading I/O amplification
         (larger overlaps while overfull) for fewer stalls.
         """
+        with uid_allocator(self._sst_uids):
+            return self._background_triggers()
+
+    def _background_triggers(self) -> list[Job]:
         jobs: list[Job] = []
         cfg = self.cfg
         soft = self.policy.soft_limit_factor
@@ -526,8 +548,12 @@ class LSMTree:
             if inr.any():
                 self._probe_sst_batch(l0[p], self.index.bloom[0][p], idx[inr],
                                       keys, seqs, reads, probed, active)
-        # Leveled: at most one fence-selected SST per level; group the
-        # still-active keys by candidate SST and probe each group at once.
+        # Leveled: at most one fence-selected SST per level.  The level's
+        # SSTs are sorted AND disjoint, so their concatenated key array is
+        # globally sorted: ONE searchsorted over the flat level resolves
+        # every candidate probe at once — the per-key accounting (probed,
+        # block reads, bloom false positives keyed on the candidate SST's
+        # seed) is element-for-element what the per-SST group loop did.
         for level in range(1, self.cfg.max_levels):
             if not active.any():
                 break
@@ -541,16 +567,44 @@ class LSMTree:
                 continue
             cidx = idx[cand]
             cpos = starts[cand]
-            order = np.argsort(cpos, kind="stable")
-            cidx, cpos = cidx[order], cpos[order]
-            uniq, first = np.unique(cpos, return_index=True)
-            bounds = np.append(first, cpos.shape[0])
-            lvl = self.levels[level]
-            blooms = self.index.bloom[level]
-            for u, a, b in zip(uniq, bounds[:-1], bounds[1:]):
-                self._probe_sst_batch(lvl[int(u)], blooms[int(u)], cidx[a:b],
-                                      keys, seqs, reads, probed, active)
+            fkeys, fseqs = self._flat_level(level)
+            probed[cidx] += 1
+            ck = keys[cidx]
+            # A candidate's fences bracket the key, so the flat rank lands
+            # inside that SST's block (no clipping needed) and a hit can
+            # only be the candidate itself (level keys are unique).
+            pos = np.searchsorted(fkeys, ck)
+            found = fkeys[pos] == ck
+            fidx = cidx[found]
+            log, tomb = seq_decode(fseqs[pos[found]])
+            seqs[fidx] = np.where(tomb, -1, log)
+            reads[fidx] += 1     # bloom true positive -> one block read
+            active[fidx] = False
+            midx = cidx[~found]
+            if midx.shape[0]:
+                fp = bloom_false_positives(
+                    keys[midx], self.index.bloom[level][cpos[~found]],
+                    self.cfg.bloom_fpr)
+                reads[midx] += fp.astype(np.int32)
         return seqs, reads, probed
+
+    def _flat_level(self, level: int) -> tuple[np.ndarray, np.ndarray]:
+        """The level's keys/seqs as one sorted flat array pair, cached
+        against the LevelIndex mutation counter (deep levels mutate
+        rarely, so rebuilds amortize to nearly nothing)."""
+        ver = self.index.version[level]
+        ent = self._flat.get(level)
+        if ent is None or ent[0] != ver:
+            lvl = self.levels[level]
+            if lvl:
+                fkeys = np.concatenate([s.keys for s in lvl])
+                fseqs = np.concatenate([s.seqs for s in lvl])
+            else:
+                fkeys = np.empty(0, np.int64)
+                fseqs = np.empty(0, np.int64)
+            ent = (ver, fkeys, fseqs)
+            self._flat[level] = ent
+        return ent[1], ent[2]
 
     def _probe_sst_batch(self, sst: SST, bloom_seed: np.uint64,
                          idx: np.ndarray, keys: np.ndarray, seqs: np.ndarray,

@@ -78,6 +78,13 @@ class SimResult:
     shard_ids: np.ndarray | None = None    # per-op shard (None: single tree)
     n_shards: int = 1
     stall_events: list[tuple[int, float]] = field(default_factory=list)
+    # per-shard chain-ledger snapshot AT RESULT TIME: chain count and the
+    # write-stop seconds the DES attributed to each shard's chains.  The
+    # fleet engine's Stats are shared across temporal passes (the ledger's
+    # temporal fields reflect the most recent pass), so per-pass results
+    # carry their own snapshot here.
+    chain_counts: list[int] | None = None
+    chain_stall_s: list[float] | None = None
 
     def pct(self, q: float, op: int | None = None) -> float:
         lat = self.latency if op is None else self.latency[self.op_types == op]
@@ -194,6 +201,27 @@ class SimResult:
         return rows
 
 
+@dataclass
+class _RunState:
+    """Everything :meth:`Simulator._setup` derives from an op stream before
+    any engine-specific event processing starts (shared by the heap loop
+    and the fleet engine)."""
+
+    n: int
+    op_types: np.ndarray
+    keys: np.ndarray
+    arrivals: np.ndarray
+    scan_lens: np.ndarray
+    service: np.ndarray
+    get_reads: np.ndarray
+    get_probed: np.ndarray
+    block_t: float
+    shard_ids: np.ndarray
+    regions: np.ndarray
+    ev_by_shard: list[list[tuple[int, int]]]
+    shard_pos: list[np.ndarray]
+
+
 class SlotPool:
     """Background executor: earliest-free-slot scheduling with job deps and
     per-(region, source-level) exclusivity."""
@@ -231,11 +259,15 @@ class ChainScheduler(SlotPool):
     within a chain is dependency order).
     """
 
-    def schedule_batch(self, jobs_durs: list[tuple[Job, float]],
-                       ready: float, region: int, priority_fn) -> None:
-        """Schedule one drained batch.  ``priority_fn(chain_jobs)`` maps a
-        chain's jobs (emission order, head last) to a sortable urgency key
-        — lower schedules earlier; ties keep emission (FIFO) order."""
+    @staticmethod
+    def rank_batch(jobs_durs: list[tuple[Job, float]],
+                   priority_fn) -> list[tuple[Job, float]]:
+        """Order one drained batch for slot assignment.
+        ``priority_fn(chain_jobs)`` maps a chain's jobs (emission order,
+        head last) to a sortable urgency key — lower schedules earlier;
+        ties keep emission (FIFO) order.  Pure function of the jobs: the
+        fleet engine ranks each batch once and replays the order across
+        temporal passes."""
         order: list[int] = []
         groups: dict[int, list[tuple[Job, float]]] = {}
         for job, dur in jobs_durs:
@@ -246,9 +278,19 @@ class ChainScheduler(SlotPool):
         ranked = sorted(order,
                         key=lambda cid: priority_fn([j for j, _ in
                                                      groups[cid]]))
-        for cid in ranked:
-            for job, dur in groups[cid]:
-                self.schedule(job, ready, dur, region)
+        return [jd for cid in ranked for jd in groups[cid]]
+
+    def schedule_seq(self, ranked: list[tuple[Job, float]],
+                     ready: float, region: int) -> None:
+        """Assign slots to an already-ranked sequence."""
+        for job, dur in ranked:
+            self.schedule(job, ready, dur, region)
+
+    def schedule_batch(self, jobs_durs: list[tuple[Job, float]],
+                       ready: float, region: int, priority_fn) -> None:
+        """Rank one drained batch by chain urgency, then assign slots."""
+        self.schedule_seq(self.rank_batch(jobs_durs, priority_fn),
+                          ready, region)
 
 
 class Simulator:
@@ -321,7 +363,10 @@ class Simulator:
 
     def _schedule_drained(self, tree: LSMTree, tree_idx: int,
                           t: float) -> None:
-        drained = tree.drain_jobs()
+        self._schedule_jobs(tree.drain_jobs(), tree_idx, t)
+
+    def _schedule_jobs(self, drained: list[Job], tree_idx: int,
+                       t: float) -> None:
         # Compactions first (priority-ordered by chain urgency), then
         # flushes: a flush's only dep is a compaction chain head, so its
         # dep is always scheduled by the time the flush pool sees it.
@@ -379,8 +424,14 @@ class Simulator:
         the stall to that chain only when the L0 wait is the binding
         component of the fill event's delay."""
         stop = self.policy.l0_stop_ssts(self.cfg)
-        active = sorted((e[1], e[2]) for e in self.l0_entries[tree_idx]
-                        if e[0] <= t and e[1] > t)
+        entries = self.l0_entries[tree_idx]
+        # Per-tree event times are nondecreasing (global event heap), so an
+        # SST cleared by now can never gate again: drop it for good rather
+        # than re-filtering the full history every event.
+        live = [e for e in entries if e[1] > t]
+        if len(live) != len(entries):
+            self.l0_entries[tree_idx] = live
+        active = sorted((e[1], e[2]) for e in live if e[0] <= t)
         if len(active) < stop:
             return 0.0, -1
         k = len(active) - stop  # waiting for the (k+1)-th clear
@@ -393,23 +444,21 @@ class Simulator:
     def _wb_stall(self, tree_idx: int, t: float) -> float:
         """Write-buffer stall: previous flush still in flight."""
         unfinished = sorted(f for f in self.flush_inflight[tree_idx] if f > t)
+        self.flush_inflight[tree_idx] = unfinished  # finished never gate again
         allowed = self.policy.write_buffer_limit(self.cfg) - 1
         if len(unfinished) < allowed:
             return 0.0
         return unfinished[len(unfinished) - allowed] - t
 
     # ------------------------------------------------------------------
-    def run(self, op_types: np.ndarray, keys: np.ndarray,
-            arrivals: np.ndarray,
-            scan_lens: np.ndarray | None = None) -> SimResult:
-        """Drive the store with a typed op stream (OpKind values).
-
-        ``scan_lens[i]`` is the requested key count of a SCAN op (ignored
-        for other kinds; may be omitted for scan-free streams).  Per-kind
-        service: PUT/DELETE constant CPU, GET CPU + block reads × device,
-        SCAN CPU + per-file seek + blocks spanned × sequential read — all
-        read kinds get the same busy-inflation post-pass.
-        """
+    def _setup(self, op_types: np.ndarray, keys: np.ndarray,
+               arrivals: np.ndarray,
+               scan_lens: np.ndarray | None) -> "_RunState":
+        """Shared run prologue: validate/normalize the op stream, price the
+        base per-kind service, route ops to shards/regions and derive the
+        fill-event schedule.  Both engines — the heap loop here and the
+        two-phase :class:`repro.core.fleet.FleetEngine` — start from the
+        exact same :class:`_RunState`."""
         n = op_types.shape[0]
         assert keys.shape[0] == n and arrivals.shape[0] == n and n > 0
         cfg = self.cfg
@@ -450,6 +499,100 @@ class Simulator:
             [[] for _ in range(self.n_shards)]
         for op_i, ti in fill_events:
             ev_by_shard[ti // self.n_regions].append((op_i, ti))
+        shard_pos = [np.arange(n)] if self.n_shards == 1 else \
+            [np.nonzero(shard_ids == s)[0] for s in range(self.n_shards)]
+        return _RunState(n=n, op_types=op_types, keys=keys,
+                         arrivals=arrivals, scan_lens=scan_lens,
+                         service=service, get_reads=get_reads,
+                         get_probed=get_probed, block_t=block_t,
+                         shard_ids=shard_ids, regions=regions,
+                         ev_by_shard=ev_by_shard, shard_pos=shard_pos)
+
+    def _busy_inflation(self, st: "_RunState") -> None:
+        """Read service refinement: device busy while compactions run
+        (vectorized post-pass over the scheduled job log)."""
+        service, arrivals, op_types = st.service, st.arrivals, st.op_types
+        get_reads, block_t = st.get_reads, st.block_t
+        # Only read kinds are inflated — compute overlap counts at their
+        # arrivals alone (a temporal-pass hot path in the fleet engine).
+        is_get = op_types == OpKind.GET
+        is_scan = op_types == OpKind.SCAN
+        ridx = np.nonzero(is_get | is_scan)[0]
+        if ridx.size == 0:
+            return
+        starts = np.sort(np.array([j.t_start for j in self.job_log
+                                   if j.kind == "compact"], dtype=np.float64))
+        ends = np.sort(np.array([j.t_finish for j in self.job_log
+                                 if j.kind == "compact"], dtype=np.float64))
+        if starts.size == 0:
+            return
+        a_r = arrivals[ridx]
+        busy_r = (np.searchsorted(starts, a_r, side="right")
+                  - np.searchsorted(ends, a_r, side="right"))
+        get_r = is_get[ridx]
+        gi = ridx[get_r]
+        service[gi] += (get_reads[gi] * block_t * (BUSY_ALPHA * busy_r[get_r]))
+        if is_scan.any():
+            seq_block_t = self.device.block_size / self.device.read_bw
+            si = ridx[~get_r]
+            service[si] += (get_reads[si] * seq_block_t
+                            * (BUSY_ALPHA * busy_r[~get_r]))
+
+    def _make_result(self, st: "_RunState", latency: np.ndarray,
+                     makespan: float,
+                     stall_events: list[tuple[int, float]] | None = None,
+                     job_log: list[Job] | None = None,
+                     arrivals: np.ndarray | None = None,
+                     chain_counts: list[int] | None = None,
+                     chain_stall_s: list[float] | None = None) -> SimResult:
+        """Assemble the result.  The overrides exist for the fleet engine,
+        whose temporal passes each snapshot their own stall/job ledgers and
+        arrival stream while sharing one engine (and its Stats)."""
+        if stall_events is None:
+            stall_events = self.stall_events
+        if job_log is None:
+            job_log = self.job_log
+        if arrivals is None:
+            arrivals = st.arrivals
+        if chain_counts is None:
+            chain_counts = [len(s.chains) for s in self.shard_stats]
+        if chain_stall_s is None:
+            chain_stall_s = [sum(c.stall_s for c in s.chains)
+                             for s in self.shard_stats]
+        stalls = np.array([d for _i, d in stall_events]) \
+            if stall_events else np.zeros(0)
+        return SimResult(
+            arrivals=arrivals, latency=latency, op_types=st.op_types,
+            stall_total=float(stalls.sum()),
+            stall_max=float(stalls.max()) if stalls.size else 0.0,
+            n_stalls=int(stalls.size), stats=self.stats,
+            job_log=job_log, makespan=makespan,
+            get_reads=st.get_reads, get_probed=st.get_probed,
+            shard_ids=st.shard_ids if self.n_shards > 1 else None,
+            n_shards=self.n_shards,
+            stall_events=stall_events,
+            chain_counts=chain_counts,
+            chain_stall_s=chain_stall_s,
+        )
+
+    def run(self, op_types: np.ndarray, keys: np.ndarray,
+            arrivals: np.ndarray,
+            scan_lens: np.ndarray | None = None) -> SimResult:
+        """Drive the store with a typed op stream (OpKind values).
+
+        ``scan_lens[i]`` is the requested key count of a SCAN op (ignored
+        for other kinds; may be omitted for scan-free streams).  Per-kind
+        service: PUT/DELETE constant CPU, GET CPU + block reads × device,
+        SCAN CPU + per-file seek + blocks spanned × sequential read — all
+        read kinds get the same busy-inflation post-pass.
+        """
+        st = self._setup(op_types, keys, arrivals, scan_lens)
+        n = st.n
+        op_types, keys, arrivals = st.op_types, st.keys, st.arrivals
+        scan_lens, service = st.scan_lens, st.service
+        get_reads, get_probed = st.get_reads, st.get_probed
+        block_t, regions = st.block_t, st.regions
+        ev_by_shard, shard_pos = st.ev_by_shard, st.shard_pos
 
         # Per-shard processed clocks: D[s] = departure time of shard s's
         # most recently serviced op (exact Lindley per queue, maintained
@@ -461,8 +604,6 @@ class Simulator:
         # shared-slot scheduling then sees chronological ready times, so
         # a lagging shard's backlogged jobs cannot phantom-block another
         # shard's earlier device work.  (op_i tiebreak: deterministic.)
-        shard_pos = [np.arange(n)] if self.n_shards == 1 else \
-            [np.nonzero(shard_ids == s)[0] for s in range(self.n_shards)]
         D = [0.0] * self.n_shards
         cur = [0] * self.n_shards
         ptrs = [0] * self.n_shards
@@ -516,20 +657,7 @@ class Simulator:
                                 get_probed, service, arrivals, block_t)
 
         # --- read service refinement: device busy while compactions run ----
-        starts = np.sort(np.array([j.t_start for j in self.job_log
-                                   if j.kind == "compact"], dtype=np.float64))
-        ends = np.sort(np.array([j.t_finish for j in self.job_log
-                                 if j.kind == "compact"], dtype=np.float64))
-        busy = (np.searchsorted(starts, arrivals, side="right")
-                - np.searchsorted(ends, arrivals, side="right"))
-        is_get = op_types == OpKind.GET
-        service[is_get] += (get_reads[is_get] * block_t
-                            * (BUSY_ALPHA * busy[is_get]))
-        is_scan = op_types == OpKind.SCAN
-        if is_scan.any():
-            seq_block_t = self.device.block_size / self.device.read_bw
-            service[is_scan] += (get_reads[is_scan] * seq_block_t
-                                 * (BUSY_ALPHA * busy[is_scan]))
+        self._busy_inflation(st)
 
         # --- exact Lindley over each shard's FIFO queue --------------------
         # (one queue = the legacy single-queue recursion, bit for bit)
@@ -545,20 +673,7 @@ class Simulator:
             departures = S + np.maximum.accumulate(base)
             latency[pos] = departures - arrivals[pos]
             makespan = max(makespan, float(departures[-1]))
-
-        stalls = np.array([d for _i, d in self.stall_events]) \
-            if self.stall_events else np.zeros(0)
-        return SimResult(
-            arrivals=arrivals, latency=latency, op_types=op_types,
-            stall_total=float(stalls.sum()),
-            stall_max=float(stalls.max()) if stalls.size else 0.0,
-            n_stalls=int(stalls.size), stats=self.stats,
-            job_log=self.job_log, makespan=makespan,
-            get_reads=get_reads, get_probed=get_probed,
-            shard_ids=shard_ids if self.n_shards > 1 else None,
-            n_shards=self.n_shards,
-            stall_events=self.stall_events,
-        )
+        return self._make_result(st, latency, makespan)
 
     # ------------------------------------------------------------------
     def _advance_clock(self, shard: int, D: float, idx: np.ndarray,
@@ -579,6 +694,45 @@ class Simulator:
         """
         if idx.shape[0] == 0:
             return D
+        wsum, wmax = self._advance_window(shard, idx, op_types, keys,
+                                          scan_lens, regions, get_reads,
+                                          get_probed, service, arrivals,
+                                          block_t)
+        return wsum + max(D, wmax)
+
+    def _advance_window(self, shard: int, idx: np.ndarray,
+                        op_types, keys, scan_lens, regions, get_reads,
+                        get_probed, service, arrivals,
+                        block_t: float) -> tuple[float, float]:
+        """The structural body of :meth:`_advance_clock`: apply the window
+        to the shard's trees, charge read service, and return the window's
+        Lindley aggregates ``(wsum, wmax)`` — total service and
+        ``max_k(a_k - S_{k-1})`` — from which ANY carried-in clock advances
+        as ``D' = wsum + max(D, wmax)``.  The fleet engine records these
+        per window in its structural phase so its temporal phase replays
+        clock advances in O(1) per event."""
+        self._apply_window(shard, idx, op_types, keys, scan_lens, regions,
+                           get_reads, get_probed, service, block_t)
+        # incremental Lindley: D_j = S_j + max(D_prev, max_k(a_k - S_{k-1}))
+        s = service[idx].astype(np.float64)
+        s_cum = np.cumsum(s)
+        a = arrivals[idx].astype(np.float64)
+        shifted = np.empty_like(s_cum)
+        shifted[0] = 0.0
+        shifted[1:] = s_cum[:-1]
+        return float(s_cum[-1]), float(np.max(a - shifted))
+
+    def _apply_window(self, shard: int, idx: np.ndarray,
+                      op_types, keys, scan_lens, regions, get_reads,
+                      get_probed, service, block_t: float) -> None:
+        """Arrival-independent half of :meth:`_advance_window`: apply the
+        window's ops to the shard's trees and charge base read service.
+        Windows are op-index-defined and stall injection only ever touches
+        the last op of an already-aggregated window, so everything here —
+        tree evolution, ``service`` base values, read counters — is the
+        same for every arrival stream over the same op stream.  The fleet
+        engine exploits exactly that: one structural replay amortized over
+        a whole arrival-rate axis."""
         w_types = op_types[idx]
         w_keys = keys[idx]
         w_lens = scan_lens[idx]
@@ -634,11 +788,3 @@ class Simulator:
             service[s_idx] += (self.device.io_latency
                                + delivered / self.device.read_bw
                                + get_probed[s_idx] * SCAN_FILE_CPU)
-        # incremental Lindley: D_j = S_j + max(D_prev, max_k(a_k - S_{k-1}))
-        s = service[idx].astype(np.float64)
-        s_cum = np.cumsum(s)
-        a = arrivals[idx].astype(np.float64)
-        shifted = np.empty_like(s_cum)
-        shifted[0] = 0.0
-        shifted[1:] = s_cum[:-1]
-        return float(s_cum[-1] + max(D, float(np.max(a - shifted))))

@@ -11,38 +11,56 @@ KV pairs (200 B in §5).
 from __future__ import annotations
 
 import itertools
+from contextlib import contextmanager
 
 import numpy as np
 
 _ids = itertools.count()
+# uid-allocator override stack: when a tree routes SST identity through its
+# own counter (trees beyond fleet slot 0 — see LSMTree), the top of this
+# stack replaces the module counter for SSTs created inside the scope.
+# Keeping slot 0 on the module counter preserves every single-tree uid
+# stream byte-for-byte (the bloom-FP hash mixes sst.uid, and the
+# read-parity capture pins those streams).
+_alloc_stack: list = []
+
+
+@contextmanager
+def uid_allocator(src):
+    """Scope SST uid assignment to ``src`` (an iterator; None keeps the
+    process-global counter).  Trees wrap their structural entry points in
+    this so a fleet's SST identities do not depend on the engine's
+    event-interleaving order across trees."""
+    if src is None:
+        yield
+        return
+    _alloc_stack.append(src)
+    try:
+        yield
+    finally:
+        _alloc_stack.pop()
 
 
 class SST:
-    __slots__ = ("keys", "seqs", "kv_size", "uid")
+    __slots__ = ("keys", "seqs", "kv_size", "uid", "n", "size", "smallest",
+                 "largest")
 
     def __init__(self, keys: np.ndarray, seqs: np.ndarray, kv_size: int):
         assert keys.ndim == 1 and keys.shape == seqs.shape
         self.keys = keys
         self.seqs = seqs
         self.kv_size = kv_size
-        self.uid = next(_ids)
-
-    # ------------------------------------------------------------------ meta
-    @property
-    def n(self) -> int:
-        return int(self.keys.shape[0])
-
-    @property
-    def size(self) -> int:
-        return self.n * self.kv_size
-
-    @property
-    def smallest(self) -> int:
-        return int(self.keys[0])
-
-    @property
-    def largest(self) -> int:
-        return int(self.keys[-1])
+        self.uid = next(_alloc_stack[-1]) if _alloc_stack else next(_ids)
+        # SSTs are immutable: metadata is materialized once (these fields
+        # are on the structural hot path — total_size / fence rebuilds).
+        n = int(keys.shape[0])
+        self.n = n
+        self.size = n * kv_size
+        if n:
+            self.smallest = int(keys[0])
+            self.largest = int(keys[-1])
+        else:
+            self.smallest, self.largest = 0, -1   # empty range
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"SST#{self.uid}[{self.smallest}..{self.largest}] n={self.n}"

@@ -75,8 +75,76 @@ def overlap_count_range(fence_lo: np.ndarray, fence_hi: np.ndarray,
 def plan_vssts(keys: np.ndarray, kv_size: int, s_m: int, s_M: int, f: int,
                fence_lo: np.ndarray, fence_hi: np.ndarray,
                sst_size_l2: int) -> list[VSSTPlan]:
-    """Cut a merged sorted key stream into vSST plans per the §4.2 heuristic."""
+    """Cut a merged sorted key stream into vSST plans per the §4.2 heuristic.
+
+    Closed form of the segment walk in :func:`plan_vssts_ref` (kept as the
+    property-test oracle).  Two batched fence ranks over the whole stream —
+    ``R[j] = #{fence_lo <= keys[j]}`` and ``Lh[i] = #{fence_hi < keys[i]}``
+    — give the overlap of any cut as ``max(0, R[j-1] - Lh[i])``.  ``R`` is
+    nondecreasing in ``j``, so the §4.2 "extend while overlap <= f" rule is
+    one searchsorted per plan: the largest ``j`` with ``R[j-1] <= Lh[i]+f``.
+    """
     del sst_size_l2  # good/poor is count-based; byte size only matters at selection
+    n = int(keys.shape[0])
+    if n == 0:
+        return []
+    min_keys = max(1, s_m // kv_size)
+    max_keys = max(min_keys, s_M // kv_size)
+
+    if fence_lo.size:
+        r_arr = np.searchsorted(fence_lo, keys, side="right")
+        lh_arr = np.searchsorted(fence_hi, keys, side="left")
+    else:
+        r_arr = np.zeros(n, np.int64)
+        lh_arr = np.zeros(n, np.int64)
+
+    def _ov(i: int, j: int) -> int:
+        # L2 SSTs intersected by [keys[i], keys[j-1]]
+        return max(0, int(r_arr[j - 1]) - int(lh_arr[i]))
+
+    plans: list[VSSTPlan] = []
+    i = 0
+    while i < n:
+        hard_end = min(n, i + max_keys)
+        j_min = min(n, i + min_keys)
+        ov_min = _ov(i, j_min)
+        if ov_min > f:
+            # Poor vSST: close at S_m (paper: "their size is always S_m").
+            plans.append(VSSTPlan(i, j_min, ov_min, good=False))
+            i = j_min
+            continue
+        # Good vSST: crossing-by-crossing replay of the segment walk over
+        # the precomputed ranks (O(1) per crossing instead of fresh fence
+        # searches).  The walk absorbs the remainder of the fence segment
+        # containing j before re-checking f — a crossing sitting exactly
+        # at j slips in unchecked, and such plans come out marked poor —
+        # then stops at the first checked crossing whose R exceeds
+        # ``Lh[i] + f``.
+        j = j_min
+        while j < hard_end:
+            j = min(hard_end,
+                    int(np.searchsorted(r_arr, r_arr[j], side="right")))
+            if j >= hard_end or int(r_arr[j]) - int(lh_arr[i]) > f:
+                break
+            j += 1
+        ov = _ov(i, j)
+        plans.append(VSSTPlan(i, j, ov, good=ov <= f))
+        i = j
+    # Absorb a too-small trailing plan into its predecessor.
+    if len(plans) >= 2 and (plans[-1].end - plans[-1].start) < min_keys:
+        tail = plans.pop()
+        prev = plans.pop()
+        ov = _ov(prev.start, tail.end)
+        plans.append(VSSTPlan(prev.start, tail.end, ov, good=ov <= f))
+    return plans
+
+
+def plan_vssts_ref(keys: np.ndarray, kv_size: int, s_m: int, s_M: int, f: int,
+                   fence_lo: np.ndarray, fence_hi: np.ndarray,
+                   sst_size_l2: int) -> list[VSSTPlan]:
+    """Segment-walk oracle for :func:`plan_vssts` (advances fence segment by
+    fence segment; exact because overlap is constant between crossings)."""
+    del sst_size_l2
     n = int(keys.shape[0])
     if n == 0:
         return []

@@ -1,0 +1,4 @@
+from . import ops, ref
+from .kernel import TILE, lindley_scan_call
+
+__all__ = ["TILE", "lindley_scan_call", "ops", "ref"]

@@ -1,0 +1,126 @@
+"""Numpy entry points for lindley_scan: x64 scope, padding, ragged batch.
+
+The DES hands over ragged per-queue (service, arrivals) arrays — one row
+per shard, or per (policy, config, shard) point of a whole sweep matrix.
+``lindley_batch_np`` pads them into ONE [B, N] program (pallas blocked
+scan, or the vmapped jnp oracle) and slices the departures back out; the
+fleet engine's final latency accounting is exactly one such call.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .kernel import TILE, lindley_scan_call
+
+_NEG_INF = float("-inf")
+
+
+def lindley_batch_np(services: list[np.ndarray], arrivals: list[np.ndarray],
+                     d0: list[float] | None = None,
+                     backend: str = "pallas",
+                     interpret: bool = True) -> list[np.ndarray]:
+    """Departure times for a ragged batch of FIFO queues.
+
+    ``services[i]``/``arrivals[i]`` are queue i's per-op service times and
+    arrival times (1-D, equal length, possibly empty); ``d0[i]`` the
+    carried-in departure clock (default -inf: fresh queue).  Returns the
+    per-queue departure arrays.  ``backend``: "pallas" (blocked-scan
+    kernel, interpret mode on CPU), "jnp" (vmapped oracle), or "numpy"
+    (:func:`lindley_numpy` per queue — no padding, no device: XLA's CPU
+    lowering serializes cumulative scans at ~20x numpy's throughput and
+    the padded batch costs ~2x extra memory traffic, so this is the
+    CPU-tier choice for large sweep matrices; all three are asserted
+    equal in the kernel tests).
+
+    Very ragged batches (a sweep mixing 1-shard and 16-shard queues) are
+    padded in power-of-two length *buckets* rather than to the single
+    global max: one device program per occupied bucket, each [b_i, n_i]
+    with <2x pad waste, instead of one [B, n_max] program that would
+    inflate every short queue to the longest.
+    """
+    assert backend in ("pallas", "jnp", "numpy")
+    b = len(services)
+    assert len(arrivals) == b
+    if d0 is None:
+        d0 = [_NEG_INF] * b
+    lens = [int(s.shape[0]) for s in services]
+    if max(lens, default=0) == 0:
+        return [np.empty(0, np.float64) for _ in range(b)]
+    if backend == "numpy":
+        # lindley_numpy per queue, but with two scratch buffers shared
+        # across the batch: fresh first-touch allocations dominate the
+        # plain per-queue loop on big matrices, and only the departure
+        # array escapes.  Operation order matches lindley_numpy exactly
+        # (bit-identical results — the parity anchor).
+        nmax = max(lens)
+        c_buf = np.empty(nmax, np.float64)
+        g_buf = np.empty(nmax, np.float64)
+        outs = []
+        for s, a, d, ln in zip(services, arrivals, d0, lens):
+            if ln == 0:
+                outs.append(np.empty(0, np.float64))
+                continue
+            cc, gg = c_buf[:ln], g_buf[:ln]
+            np.cumsum(np.asarray(s, np.float64), out=cc)
+            np.copyto(gg, a)
+            gg[1:] -= cc[:-1]
+            np.maximum(gg, d, out=gg)
+            np.maximum.accumulate(gg, out=gg)
+            outs.append(cc + gg)
+        return outs
+    # bucket i by padded length: TILE * 2^ceil(log2(len/TILE))
+    buckets: dict[int, list[int]] = {}
+    for i, ln in enumerate(lens):
+        if ln == 0:
+            continue
+        n_pad = TILE
+        while n_pad < ln:
+            n_pad *= 2
+        buckets.setdefault(n_pad, []).append(i)
+    out: list[np.ndarray | None] = [np.empty(0, np.float64)] * b
+    import jax
+    with jax.experimental.enable_x64():
+        for n_pad, idxs in sorted(buckets.items()):
+            S = np.zeros((len(idxs), n_pad), np.float64)
+            # -inf arrival padding: the padded G terms never win the
+            # running max, so real departures are unaffected and pad
+            # outputs are sliced away.
+            A = np.full((len(idxs), n_pad), _NEG_INF, np.float64)
+            for row, i in enumerate(idxs):
+                S[row, :lens[i]] = services[i]
+                A[row, :lens[i]] = arrivals[i]
+            D0 = np.asarray([d0[i] for i in idxs], np.float64)
+            if backend == "pallas":
+                dep = lindley_scan_call(S, A, D0, interpret=interpret)
+            else:
+                from .ref import lindley_ref_batch
+                dep = lindley_ref_batch(S, A, D0)
+            dep = np.asarray(dep, np.float64)
+            for row, i in enumerate(idxs):
+                out[i] = dep[row, :lens[i]]
+    return out
+
+
+def lindley_np(service: np.ndarray, arrivals: np.ndarray,
+               d0: float = _NEG_INF, backend: str = "pallas",
+               interpret: bool = True) -> np.ndarray:
+    """Single-queue convenience wrapper over :func:`lindley_batch_np`."""
+    return lindley_batch_np([np.asarray(service, np.float64)],
+                            [np.asarray(arrivals, np.float64)],
+                            [d0], backend=backend, interpret=interpret)[0]
+
+
+def lindley_numpy(service: np.ndarray, arrivals: np.ndarray,
+                  d0: float = _NEG_INF) -> np.ndarray:
+    """The monolithic numpy recursion — bit-identical to the DES's
+    per-shard accounting pass in ``Simulator.run`` (the parity anchor the
+    kernel tests compare both backends against)."""
+    s = np.asarray(service, np.float64)
+    a = np.asarray(arrivals, np.float64)
+    if s.shape[0] == 0:
+        return np.empty(0, np.float64)
+    s_cum = np.cumsum(s)
+    base = a.copy()
+    base[1:] -= s_cum[:-1]
+    return s_cum + np.maximum.accumulate(np.maximum(base, d0))

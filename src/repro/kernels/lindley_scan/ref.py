@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for lindley_scan: the FIFO-queue departure recursion.
+
+The DES advances each shard's processed clock with the Lindley recursion
+
+    D_j = S_j + max(D_prev, max_{k<=j}(a_k - S_{k-1})),   S_j = cumsum(s)_j
+
+(``Simulator._advance_clock`` / the final per-shard accounting pass in
+``Simulator.run``).  Writing G_j = a_j - S_{j-1} this is an associative
+max-plus scan: D_j = S_j + max(d0, cummax(G)_j), with d0 = -inf for a
+queue observed from its first arrival.  The oracle computes exactly that
+in float64 — absolute simulated times run to hundreds of seconds while
+latencies are microseconds, so float32 would destroy the tail.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lindley_ref(service: jnp.ndarray, arrivals: jnp.ndarray,
+                d0: float = -jnp.inf) -> jnp.ndarray:
+    """Departure times of one FIFO queue: ``service``/``arrivals`` are
+    1-D, same length, float64; ``d0`` is the departure clock carried in
+    from an earlier window (-inf: no prior history)."""
+    s_cum = jnp.cumsum(service)
+    shifted = jnp.concatenate([jnp.zeros((1,), s_cum.dtype), s_cum[:-1]])
+    g = arrivals - shifted
+    m = jnp.maximum(jax.lax.cummax(g), d0)
+    return s_cum + m
+
+
+# Batched rows: [B, N] service/arrivals, [B] d0 -> [B, N] departures.
+# THE vmap axis of the fleet engine: every (policy, config, shard) queue
+# in a sweep matrix is one row of this single batched program.  jit so
+# the whole batch compiles to ONE fused program instead of dispatching
+# eagerly per primitive (sweep matrices hit the same padded shape, so
+# the compile is paid once per shape).
+lindley_ref_batch = jax.jit(jax.vmap(lindley_ref, in_axes=(0, 0, 0)))

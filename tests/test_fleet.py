@@ -1,0 +1,155 @@
+"""Heap-loop vs batched fleet engine parity.
+
+The serial :class:`Simulator` is the correctness oracle; the two-phase
+:class:`FleetEngine` must reproduce it exactly — byte-identical store
+behaviour (reads, probes, stall counts) and per-op latencies to float
+tolerance — across every registered policy, shard counts, and arrival
+schedules sharing one structural replay.
+
+Both engines draw SST/job/chain uids from module-level counters (slot-0
+trees keep the seed-compatible shared stream), and uids seed blooms: the
+counters must be rewound between engines or the second run's bloom
+false-positive draws differ.  ``reset_uid_counters`` is that idiom.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (DeviceModel, FleetEngine, Simulator, SweepPoint,
+                        fleet_sweep, get_policy, reset_uid_counters,
+                        serial_sweep)
+
+SCALE = 1 << 17
+DEV = DeviceModel.scaled(1 / 1024)
+POLICIES = ("vlsm", "rocksdb", "rocksdb_io", "adoc", "lsmi", "lazy")
+
+
+def _workload(seed=3, n=7_000, read_frac=0.3, rate=5_000.0):
+    rng = np.random.default_rng(seed)
+    ops = (rng.random(n) < read_frac).astype(np.uint8)
+    keys = rng.integers(0, SCALE, n).astype(np.int64)
+    arr = np.arange(n, dtype=np.float64) / rate
+    return ops, keys, arr
+
+
+def _assert_parity(r_ser, r_fle):
+    # structural replay byte-identical...
+    assert np.array_equal(r_ser.get_reads, r_fle.get_reads)
+    assert np.array_equal(r_ser.get_probed, r_fle.get_probed)
+    # ...temporal pass event-identical...
+    assert r_ser.n_stalls == r_fle.n_stalls
+    assert r_ser.stall_events == r_fle.stall_events
+    assert abs(r_ser.stall_total - r_fle.stall_total) < 1e-12
+    # ...latency within float tolerance (one batched scan vs n serial ones)
+    assert float(np.max(np.abs(r_fle.latency - r_ser.latency))) < 1e-9
+    assert abs(r_fle.makespan - r_ser.makespan) < 1e-9
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("k", (1, 4))
+def test_fleet_matches_heap(policy, k):
+    """Every registered policy, single- and multi-shard: the fleet engine
+    is a drop-in for the serial heap loop."""
+    cfg = get_policy(policy).default_config(scale=SCALE).with_(n_shards=k)
+    ops, keys, arr = _workload()
+    reset_uid_counters()
+    r_ser = Simulator(cfg, DEV).run(ops, keys, arr)
+    reset_uid_counters()
+    r_fle = FleetEngine(cfg, DEV).run(ops, keys, arr)
+    _assert_parity(r_ser, r_fle)
+
+
+def test_multi_rate_passes_match_per_rate_heap_runs():
+    """One structural replay, many temporal passes: every pass on the
+    rate axis must equal a fresh serial run at that rate — including the
+    passes run AFTER other rates (no temporal state bleeds through)."""
+    from repro.kernels.lindley_scan.ops import lindley_batch_np
+    cfg = get_policy("vlsm").default_config(scale=SCALE).with_(n_shards=2)
+    ops, keys, _ = _workload()
+    n = ops.shape[0]
+    rates = (2_000.0, 20_000.0, 5_000.0)
+    arrs = [np.arange(n, dtype=np.float64) / r for r in rates]
+
+    serial = []
+    for a in arrs:
+        reset_uid_counters()
+        serial.append(Simulator(cfg, DEV).run(ops, keys, a))
+
+    reset_uid_counters()
+    eng = FleetEngine(cfg, DEV)
+    eng.prepare_structural(ops, keys)
+    pendings = [eng.temporal_pass(a) for a in arrs]
+    for r_ser, pd in zip(serial, pendings):
+        deps = lindley_batch_np([q[0] for q in pd.queues],
+                                [q[1] for q in pd.queues], backend="jnp")
+        _assert_parity(r_ser, eng.finalize(deps, pending=pd))
+
+
+def test_fleet_sweep_matches_serial_sweep():
+    """The matrix drivers: fleet_sweep's single batched program equals
+    serial_sweep run by run (both rewind uid counters per engine, so the
+    comparison needs no external setup)."""
+    ops, keys, _ = _workload(n=5_000)
+    n = ops.shape[0]
+    grid = [np.arange(n, dtype=np.float64) / r for r in (3_000.0, 12_000.0)]
+    points = [SweepPoint(label=f"{p}/{k}",
+                         cfg=get_policy(p).default_config(scale=SCALE)
+                         .with_(n_shards=k),
+                         device=DEV, op_types=ops, keys=keys,
+                         arrivals_grid=grid)
+              for p in ("vlsm", "rocksdb") for k in (1, 2)]
+    fr = fleet_sweep(points, backend="jnp")
+    sr = serial_sweep(points)
+    assert len(fr) == len(points) and all(len(x) == 2 for x in fr)
+    for pf, ps in zip(fr, sr):
+        for a, b in zip(pf, ps):
+            _assert_parity(b, a)
+
+
+def test_fleet_pallas_backend_matches_jnp():
+    """The Pallas blocked-scan kernel (interpret mode here) and the
+    vmapped jnp oracle agree through the full engine path."""
+    cfg = get_policy("vlsm").default_config(scale=SCALE)
+    ops, keys, arr = _workload(n=3_000)
+    reset_uid_counters()
+    r_jnp = FleetEngine(cfg, DEV).run(ops, keys, arr, backend="jnp")
+    reset_uid_counters()
+    r_pal = FleetEngine(cfg, DEV).run(ops, keys, arr, backend="pallas")
+    assert float(np.max(np.abs(r_jnp.latency - r_pal.latency))) < 1e-9
+
+
+@pytest.mark.slow
+def test_fleet_full_matrix_parity():
+    """The full bench-shaped matrix — every policy × shard count × a
+    rate axis — pinned to the serial oracle run by run.  Excluded from
+    the default run (see pyproject addopts); ``pytest -m slow``."""
+    ops, keys, _ = _workload()
+    n = ops.shape[0]
+    grid = [np.arange(n, dtype=np.float64) / r
+            for r in (2_000.0, 6_000.0, 18_000.0)]
+    points = [SweepPoint(label=f"{p}/{k}",
+                         cfg=get_policy(p).default_config(scale=SCALE)
+                         .with_(n_shards=k),
+                         device=DEV, op_types=ops, keys=keys,
+                         arrivals_grid=grid)
+              for p in POLICIES for k in (1, 2, 4, 16)]
+    fr = fleet_sweep(points, backend="numpy")
+    sr = serial_sweep(points)
+    for pf, ps in zip(fr, sr):
+        for a, b in zip(pf, ps):
+            _assert_parity(b, a)
+
+
+def test_fleet_empty_shards():
+    """Shards no key routes to: empty windows, empty Lindley queues."""
+    cfg = get_policy("vlsm").default_config(scale=SCALE).with_(n_shards=4)
+    n = 3_000
+    rng = np.random.default_rng(0)
+    ops = (rng.random(n) < 0.3).astype(np.uint8)
+    keys = np.full(n, 12_345, np.int64)      # ONE key: one shard gets all
+    arr = np.arange(n, dtype=np.float64) / 4_000.0
+    reset_uid_counters()
+    r_ser = Simulator(cfg, DEV).run(ops, keys, arr)
+    reset_uid_counters()
+    r_fle = FleetEngine(cfg, DEV).run(ops, keys, arr)
+    _assert_parity(r_ser, r_fle)

@@ -110,6 +110,30 @@ def test_plan_vssts_properties(n_l2, seed):
             assert p.overlap_ssts <= f
 
 
+@given(st.integers(1, 40), st.integers(0, 2**20), st.integers(1, 6),
+       st.integers(2, 60))
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_plan_vssts_matches_ref(n_l2, seed, f, max_kv):
+    """The closed-form planner is plan-for-plan identical to the segment
+    walk across fence densities, growth factors and size windows."""
+    from repro.core.vsst import plan_vssts_ref
+    rng = np.random.default_rng(seed)
+    kv = 100
+    s_M, s_m = max_kv * kv, max(1, max_kv // 4) * kv
+    l2 = _mk_l2(n_l2, 50, kv=kv, spacing=int(rng.integers(100, 5000)))
+    lo, hi = l2_fences(l2)
+    keys = np.unique(rng.integers(-500, n_l2 * 5000,
+                                  size=int(rng.integers(1, 500))
+                                  ).astype(np.int64))
+    args = (keys, kv, s_m, s_M, f, lo, hi, 50 * kv)
+    assert plan_vssts(*args) == plan_vssts_ref(*args)
+    # empty-fence degenerate case
+    z = np.empty(0, np.int64)
+    args = (keys, kv, s_m, s_M, f, z, z, 50 * kv)
+    assert plan_vssts(*args) == plan_vssts_ref(*args)
+
+
 def test_select_good_prefers_low_ratio():
     kv, f = 100, 4
     l2 = _mk_l2(8, 50, kv=kv, spacing=5000)

@@ -88,3 +88,81 @@ def test_db_bench_fillrandom():
     row_p = fillrandom(cfg, 30_000, dist="pareto", scale=1 << 17)
     # skew -> updates die young -> less amplification (paper Fig 13c)
     assert row_p["io_amp"] <= row["io_amp"]
+
+
+# ----------------------------------------------------------------- Lindley
+# edge cases (heap loop vs the batched paths on the shapes that break
+# naive window accounting; see repro.core.fleet for the aggregates)
+
+def _engine_parity(cfg, ops, keys, arr):
+    """Serial heap loop vs the two-phase fleet engine, op for op."""
+    from repro.core import FleetEngine, reset_uid_counters
+    dev = DeviceModel.scaled(LAM)
+    reset_uid_counters()
+    r_ser = Simulator(cfg, dev).run(ops, keys, arr)
+    reset_uid_counters()
+    r_fle = FleetEngine(cfg, dev).run(ops, keys, arr)
+    assert np.array_equal(r_ser.get_reads, r_fle.get_reads)
+    assert r_ser.n_stalls == r_fle.n_stalls
+    assert float(np.max(np.abs(r_ser.latency - r_fle.latency))) < 1e-9
+    return r_ser
+
+
+def test_lindley_empty_shard_windows():
+    """Shards no key routes to: zero windows, empty Lindley queues in the
+    vectorized path, and nothing in the serial heap — identical either way."""
+    cfg = LSMConfig.vlsm_default(scale=SCALE).with_(n_shards=8)
+    n = 2_000
+    ops = np.zeros(n, np.uint8)
+    keys = np.full(n, 7, np.int64)        # ONE key: 7 of 8 shards idle
+    arr = np.arange(n, dtype=np.float64) / 3e3
+    _engine_parity(cfg, ops, keys, arr)
+
+
+def test_lindley_single_op_windows():
+    """memtable_size == kv_size -> keys_per_memtable == 1: every write is
+    its own fill window (wsum = one op's service, wmax = its slack), the
+    densest possible event schedule."""
+    base = LSMConfig.vlsm_default(scale=SCALE)
+    cfg = base.with_(memtable_size=base.kv_size)
+    assert cfg.keys_per_memtable == 1
+    rng = np.random.default_rng(5)
+    n = 400
+    ops = (rng.random(n) < 0.25).astype(np.uint8)
+    keys = rng.integers(0, SCALE, n).astype(np.int64)
+    arr = np.arange(n, dtype=np.float64) / 1e3
+    _engine_parity(cfg, ops, keys, arr)
+
+
+def test_lindley_zero_service():
+    """Zero service: departures collapse to the running max of arrivals.
+    Every kernel backend must match the numpy anchor on the degenerate
+    queue (regression guard for the padded batch's -inf padding)."""
+    from repro.kernels.lindley_scan.ops import lindley_batch_np, lindley_numpy
+    n = 257                               # off the TILE boundary
+    s = np.zeros(n, np.float64)
+    rng = np.random.default_rng(9)
+    a = np.sort(rng.random(n))
+    a[n // 2:n // 2 + 8] = a[n // 2]      # plus a mid-queue burst
+    anchor = lindley_numpy(s, a)
+    np.testing.assert_array_equal(anchor, np.maximum.accumulate(a))
+    for backend in ("numpy", "jnp", "pallas"):
+        dep = lindley_batch_np([s], [a], backend=backend)[0]
+        np.testing.assert_allclose(dep, anchor, rtol=0, atol=1e-12)
+
+
+def test_lindley_burst_straddles_fill_event():
+    """An arrival plateau centred on the keys_per_memtable-th write: the
+    burst spans a window boundary, so the second window's wmax term comes
+    from ops that queued BEFORE its fill event -- the case the per-window
+    (wsum, wmax) aggregates must carry across windows."""
+    cfg = LSMConfig.vlsm_default(scale=SCALE)
+    kpm = cfg.keys_per_memtable
+    assert kpm > 8
+    n = 3 * kpm
+    ops = np.zeros(n, np.uint8)           # all-PUT: windows every kpm ops
+    rng = np.random.default_rng(13)
+    keys = rng.integers(0, SCALE, n).astype(np.int64)
+    arr = np.arange(n, dtype=np.float64) / 2e3
+    arr[kpm - 4:kpm + 4] = arr[kpm - 4]   # burst straddling the boundary
+    _engine_parity(cfg, ops, keys, arr)
