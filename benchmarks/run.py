@@ -26,7 +26,15 @@ def main() -> None:
                          "from the repro.core.policies registry")
     ap.add_argument("--seed", type=int, default=7,
                     help="base RNG seed for the db_bench-backed sections")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run every simulation under the DES schedule "
+                         "sanitizer (REPRO_SANITIZE=1; see "
+                         "docs/analysis.md) — slower, but any scheduling "
+                         "invariant violation aborts at first divergence")
     args = ap.parse_args()
+    if args.sanitize:
+        import os
+        os.environ["REPRO_SANITIZE"] = "1"
 
     from . import fig_benchmarks as fb
     names = args.only.split(",") if args.only else list(fb.ALL)

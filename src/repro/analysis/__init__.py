@@ -1,0 +1,46 @@
+"""repro-lint: static architecture/determinism analysis for the repro tree.
+
+The repo's correctness story rests on invariants that code review alone
+cannot hold: bit-identical fleet-vs-serial parity, byte-identical read
+replays, and the mechanism/policy split.  This package checks them
+mechanically, over the repo's own AST and import graph:
+
+* :mod:`repro.analysis.layering` — the mechanism (``core/lsm.py`` /
+  ``sim.py`` / ``fleet.py``) must not import or branch on concrete
+  policies; policies may only touch the tree through the public
+  primitives named in ``base.py``'s contract table; ``kernels/`` never
+  imports ``core``; the import graph stays acyclic.
+* :mod:`repro.analysis.determinism` — wall-clock reads, global RNG,
+  set-iteration order, identity-keyed sorts and float reductions over
+  unordered containers: the hazards the parity gates depend on.
+* :mod:`repro.analysis.contracts` — registered policies implement the
+  hook set with compatible signatures, and the generated contract table
+  in ``base.py`` matches the actual hooks.
+* :mod:`repro.analysis.sanitizer` — the runtime half (``REPRO_SANITIZE=1``):
+  a DES schedule sanitizer asserting the scheduling-order preconditions
+  the stall-gate pruning optimisations assume.
+
+CLI: ``python -m repro.analysis [--format json] [paths...]`` — exits
+non-zero on any finding not covered by the checked-in baseline
+(``.repro-lint-baseline.json``).  See ``docs/analysis.md``.
+"""
+
+from .engine import (DEFAULT_BASELINE_NAME, FAMILIES, analyze_paths,
+                     analyze_repo, find_repo_root)
+from .findings import Finding, load_baseline, write_baseline
+from .sanitizer import ScheduleSanitizer, ScheduleSanitizerError, \
+    maybe_sanitizer
+
+__all__ = [
+    "DEFAULT_BASELINE_NAME",
+    "FAMILIES",
+    "Finding",
+    "ScheduleSanitizer",
+    "ScheduleSanitizerError",
+    "analyze_paths",
+    "analyze_repo",
+    "find_repo_root",
+    "load_baseline",
+    "maybe_sanitizer",
+    "write_baseline",
+]

@@ -1,0 +1,99 @@
+"""CLI: ``python -m repro.analysis [--format json] [paths...]``.
+
+Exit status: 0 when every finding is baselined (or none), 1 when fresh
+findings exist, 2 on usage errors.  See ``docs/analysis.md``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .engine import (DEFAULT_BASELINE_NAME, FAMILIES, analyze_paths,
+                     find_repo_root, split_baselined)
+from .findings import load_baseline, write_baseline
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-lint: architecture/determinism analysis "
+                    "over the repo's AST and import graph")
+    parser.add_argument("paths", nargs="*",
+                        help="files/directories to analyze, relative to "
+                             "--root (default: src/repro)")
+    parser.add_argument("--root", type=Path, default=None,
+                        help="analysis root (default: the enclosing "
+                             "repo)")
+    parser.add_argument("--format", choices=("text", "json"),
+                        default="text")
+    parser.add_argument("--rules", default=None, metavar="FAM[,FAM...]",
+                        help=f"rule families to run (default: all of "
+                             f"{', '.join(FAMILIES)})")
+    parser.add_argument("--baseline", type=Path, default=None,
+                        help=f"baseline file (default: "
+                             f"<root>/{DEFAULT_BASELINE_NAME})")
+    parser.add_argument("--no-baseline", action="store_true",
+                        help="report baselined findings too")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="accept all current findings into the "
+                             "baseline file and exit 0")
+    parser.add_argument("--write-contract-table", action="store_true",
+                        help="regenerate the contract table in "
+                             "core/policies/base.py, then exit")
+    args = parser.parse_args(argv)
+
+    root = (args.root or find_repo_root()).resolve()
+    if args.write_contract_table:
+        from .contracts import write_contract_table
+        base_path = root / "src/repro/core/policies/base.py"
+        if not base_path.exists():
+            parser.error(f"no base.py under {root}")
+        changed = write_contract_table(base_path)
+        print(f"{base_path}: "
+              + ("contract table rewritten" if changed
+                 else "contract table already up to date"))
+        return 0
+
+    families = None
+    if args.rules:
+        families = tuple(f.strip() for f in args.rules.split(",")
+                         if f.strip())
+    paths = [root / p for p in args.paths] if args.paths else None
+    try:
+        findings = analyze_paths(root, paths, families)
+    except ValueError as e:
+        parser.error(str(e))
+
+    baseline_path = args.baseline or (root / DEFAULT_BASELINE_NAME)
+    if args.write_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"{baseline_path}: {len(findings)} finding(s) baselined")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    fresh, known = split_baselined(findings, baseline)
+    shown = findings if args.no_baseline else fresh
+
+    if args.format == "json":
+        print(json.dumps({
+            "root": str(root),
+            "families": list(families or FAMILIES),
+            "fresh": [f.to_dict() for f in fresh],
+            "baselined": [f.to_dict() for f in known],
+            "exit": 1 if fresh else 0,
+        }, indent=2))
+    else:
+        for f in shown:
+            print(f.format())
+        tail = f"{len(fresh)} finding(s)"
+        if known:
+            tail += f" ({len(known)} baselined)"
+        print(("FAIL: " if fresh else "OK: ") + tail)
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,7 +24,7 @@ from __future__ import annotations
 import hashlib
 import json
 import threading
-import time
+
 from pathlib import Path
 
 import numpy as np
@@ -59,6 +59,10 @@ class LSMCheckpointStore:
         self.seg_live: dict[str, int] = {}
         self.steps: dict[int, dict] = {}
         self._leaf_ids: dict[str, int] = {}
+        # monotonic per-store segment sequence: segment names must be
+        # unique and deterministic across reruns (wall-clock suffixes
+        # collide under fast saves and break replay comparisons)
+        self._seg_seq = 0
         self._lock = threading.Lock()
         self._pending: list[threading.Thread] = []
         self._load_manifest()
@@ -87,6 +91,15 @@ class LSMCheckpointStore:
         self.steps = {int(k): v for k, v in m["steps"].items()}
         self._leaf_ids = m["leaf_ids"]
         self.seg_live = m["seg_live"]
+        # resume the segment sequence past every name ever recorded
+        for names in (self.seg_live, {s for s, _l, _p in
+                                      self.locator.values()}):
+            for seg in names:
+                try:
+                    self._seg_seq = max(self._seg_seq,
+                                        int(seg.rsplit("_", 1)[-1]) + 1)
+                except ValueError:
+                    pass
         # rebuild the LSM index from the manifest (WAL-equivalent)
         for seq in sorted(self.locator):
             seg, leaf, page = self.locator[seq]
@@ -136,7 +149,8 @@ class LSMCheckpointStore:
 
     def _save_host(self, step: int, names, host_leaves) -> dict:
         with self._lock:
-            seg_name = f"seg_{step:08d}_{int(time.time()*1e3) % 1_000_000}"
+            seg_name = f"seg_{step:08d}_{self._seg_seq:06d}"
+            self._seg_seq += 1
             seg_path = self.root / "segments" / f"{seg_name}.npz"
             payload: dict[str, np.ndarray] = {}
             written = total = 0

@@ -389,7 +389,7 @@ class LSMTree:
             guids = {s.uid for s in group}
             self.levels[level] = [s for s in self.levels[level]
                                   if s.uid not in guids]
-            self.index.remove_uids(level, list(guids))
+            self.index.remove_uids(level, sorted(guids))
             read_b += total_size(group) + total_size(over)
             write_b += sum(s.size for s in new)
             n_in += len(group) + len(over)

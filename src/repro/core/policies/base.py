@@ -46,6 +46,33 @@ from ..types import LSMConfig
 if TYPE_CHECKING:  # mechanism types, imported lazily to avoid a cycle
     from ..lsm import Job, LSMTree
 
+#: The public mechanism surface: the only ``tree`` methods a policy may
+#: call to mutate structure.  repro-lint (rules L103/L104) enforces this
+#: statically and the generated contract table below renders it.
+MECHANISM_PRIMITIVES = (
+    "emit_compact_job",
+    "merge_down",
+    "merge_runs",
+    "overlap",
+    "replace_in_level",
+    "strip_bottom_tombstones",
+)
+#: Read-only ``tree.index`` queries policies may use for scoring.
+INDEX_QUERIES = (
+    "check_against",
+    "fences",
+    "n_ssts",
+    "overlap_bytes",
+    "overlap_counts",
+    "overlap_ranges",
+    "overlap_slice",
+    "scan_spans",
+    "size_prefix",
+)
+#: ``tree.index`` mutators owned by the two shared L0 bodies — policies
+#: never call these anywhere else.
+L0_INDEX_MUTATORS = ("l0_clear", "l0_popleft")
+
 
 class CompactionPolicy:
     """Strategy base class: every hook has the RocksDB-leveled default.
@@ -64,6 +91,34 @@ class CompactionPolicy:
     * Pure *parameter* hooks (``level_target``, ``l0_stop_ssts``, ...)
       must be deterministic functions of their inputs — the DES calls
       them repeatedly and assumes stable answers.
+
+    .. contract-table-start
+
+    Hook surface (generated; regenerate with ``python -m repro.analysis --write-contract-table``):
+
+    default_config(scale, **kw)            [required]
+    level_target(cfg, level)               [default provided]
+    level_limit(cfg, level)                [default provided]
+    l0_stop_ssts(cfg)                      [default provided]
+    write_buffer_limit(cfg)                [default provided]
+    chain_priority(cfg, head, chain_jobs)  [default provided]
+    pick_batch(cfg)                        [default provided]
+    incoming_bytes(tree, level)            [default provided]
+    compact_l0(tree, deps)                 [default provided]
+    pick_compaction(tree, level, deps)     [default provided]
+    build_l1_ssts(tree, keys, seqs)        [default provided]
+    check_invariants(tree)                 [default provided]
+    _tiering_l0(tree, deps)                [shared L0 body]
+    _incremental_l0(tree, deps)            [shared L0 body]
+
+    mechanism primitives (the only tree mutators policies may call):
+      emit_compact_job, merge_down, merge_runs, overlap, replace_in_level, strip_bottom_tombstones
+    read-only index queries:
+      check_against, fences, n_ssts, overlap_bytes, overlap_counts, overlap_ranges, overlap_slice, scan_spans, size_prefix
+    index mutators owned by the shared L0 bodies:
+      l0_clear, l0_popleft
+
+    .. contract-table-end
     """
 
     #: registry key; also the value carried in ``LSMConfig.policy``

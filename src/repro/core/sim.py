@@ -48,6 +48,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..analysis.sanitizer import maybe_sanitizer
 from .lsm import Job, LSMTree
 from .policies import get_policy
 from .shard import ShardRouter
@@ -224,11 +225,17 @@ class _RunState:
 
 class SlotPool:
     """Background executor: earliest-free-slot scheduling with job deps and
-    per-(region, source-level) exclusivity."""
+    per-(region, source-level) exclusivity.
 
-    def __init__(self, n_slots: int):
+    ``sanitizer`` (``REPRO_SANITIZE=1``) audits every assignment it makes
+    — chain edges honoured, no double-occupied (tree, level) slot — at
+    the cost of one ``None`` check per job otherwise.
+    """
+
+    def __init__(self, n_slots: int, sanitizer=None):
         self.free_at = [0.0] * max(1, n_slots)
         self.level_free: dict[tuple[int, int], float] = {}
+        self.sanitizer = sanitizer
 
     def schedule(self, job: Job, ready: float, duration: float,
                  region: int = 0) -> None:
@@ -242,6 +249,8 @@ class SlotPool:
         job.scheduled = True
         self.free_at[slot] = job.t_finish
         self.level_free[lkey] = job.t_finish
+        if self.sanitizer is not None:
+            self.sanitizer.on_schedule(region, job)
 
 
 class ChainScheduler(SlotPool):
@@ -337,9 +346,12 @@ class Simulator:
         # high-priority flush pool vs low-priority compaction pool) —
         # shared across ALL shards: the device doesn't grow with the
         # fleet, which is exactly the contention under study.
-        self.flush_pool = SlotPool(1)
+        # REPRO_SANITIZE=1: runtime schedule sanitizer (None when off)
+        self.sanitizer = maybe_sanitizer()
+        self.flush_pool = SlotPool(1, sanitizer=self.sanitizer)
         self.compact_pool = ChainScheduler(
-            max(1, self.device.compaction_slots - 1))
+            max(1, self.device.compaction_slots - 1),
+            sanitizer=self.sanitizer)
         # temporal L0 occupancy per tree: [appear_t, clears_at,
         # clearing_chain_id] entries (chain_id -1 until consumed — used to
         # attribute write-stop stall time to the chain that clears it)
@@ -423,6 +435,8 @@ class Simulator:
         slot the queue waits for (-1 when unknown); the caller attributes
         the stall to that chain only when the L0 wait is the binding
         component of the fill event's delay."""
+        if self.sanitizer is not None:
+            self.sanitizer.on_gate(tree_idx, t)
         stop = self.policy.l0_stop_ssts(self.cfg)
         entries = self.l0_entries[tree_idx]
         # Per-tree event times are nondecreasing (global event heap), so an
@@ -443,6 +457,8 @@ class Simulator:
 
     def _wb_stall(self, tree_idx: int, t: float) -> float:
         """Write-buffer stall: previous flush still in flight."""
+        if self.sanitizer is not None:
+            self.sanitizer.on_gate(tree_idx, t)
         unfinished = sorted(f for f in self.flush_inflight[tree_idx] if f > t)
         self.flush_inflight[tree_idx] = unfinished  # finished never gate again
         allowed = self.policy.write_buffer_limit(self.cfg) - 1
@@ -629,6 +645,8 @@ class Simulator:
         while heap:
             t, op_i, s, ti = heapq.heappop(heap)
             # t = D[s]: the fill happens when its last write is serviced
+            if self.sanitizer is not None:
+                self.sanitizer.on_event(ti, t)
             tree = self.trees[ti]
             tree.seal_memtable()
             stall = self._wb_stall(ti, t)

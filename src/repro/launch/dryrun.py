@@ -127,7 +127,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     for v in mesh.shape.values():
         chips *= v
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if shape.kind == "train":
         params, opt, batch = train_specs(cfg, shape, mesh, fsdp=fsdp)
 
@@ -162,9 +162,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     with mesh:
         lowered = fn.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
     try:
@@ -331,7 +331,7 @@ def main():
                 cells.append((arch, shape, mp))
 
     for arch, shape, mp in cells:
-        t0 = time.time()
+        t0 = time.perf_counter()
         r = run_cell(arch, shape, mp, force=args.force, variant=args.variant,
                      composed=args.composed)
         status = ("SKIP " + r.get("skipped", "")) if "skipped" in r else (
@@ -340,7 +340,7 @@ def main():
             f"tc={r['roofline']['t_compute_s']:.3e} "
             f"tm={r['roofline']['t_memory_s']:.3e} "
             f"tx={r['roofline']['t_collective_s']:.3e}")
-        print(f"[{time.time()-t0:7.1f}s] {arch:18s} {shape:12s} "
+        print(f"[{time.perf_counter()-t0:7.1f}s] {arch:18s} {shape:12s} "
               f"{'2x16x16' if mp else '16x16':8s} {status}", flush=True)
         if "error" in r:
             print(r["error"], flush=True)

@@ -113,11 +113,11 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--fail-at", type=int, default=None)
     args = ap.parse_args()
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = run(args.arch, smoke=args.smoke, steps=args.steps,
               batch=args.batch, seq=args.seq, ckpt_every=args.ckpt_every,
               fail_at=args.fail_at)
-    print(f"done in {time.time()-t0:.1f}s; first loss {out['losses'][0]:.3f}"
+    print(f"done in {time.perf_counter()-t0:.1f}s; first loss {out['losses'][0]:.3f}"
           f" -> last {out['losses'][-1]:.3f}; restarts={out['restarts']}")
 
 

@@ -1,0 +1,31 @@
+"""Rule-family-4 fixture: a corrupted DES schedule the runtime sanitizer
+must reject.  ``tests/test_analysis.py`` runs this in a subprocess with
+``REPRO_SANITIZE=1`` and expects a non-zero exit (S403: two jobs
+occupying the same (tree, level) compaction slot at overlapping times).
+"""
+
+import os
+from dataclasses import dataclass
+
+os.environ["REPRO_SANITIZE"] = "1"
+
+from repro.analysis.sanitizer import maybe_sanitizer  # noqa: E402
+
+
+@dataclass
+class FakeJob:
+    t_start: float
+    t_finish: float
+    kind: str = "compact"
+    level: int = 1
+    chain_id: int = 7
+    parent_job: object = None
+    scheduled: bool = True
+
+
+sanitizer = maybe_sanitizer()
+assert sanitizer is not None, "REPRO_SANITIZE=1 must enable the sanitizer"
+sanitizer.on_schedule(0, FakeJob(t_start=0.0, t_finish=5.0))
+# same tree, same source level, starts while the slot is still busy:
+sanitizer.on_schedule(0, FakeJob(t_start=2.0, t_finish=6.0))
+raise SystemExit("sanitizer failed to reject an overlapping slot schedule")

@@ -1,0 +1,7 @@
+"""Half of the fixture import cycle."""
+
+from . import cyc_b  # expect-lint: L106
+
+
+def ping():
+    return cyc_b.pong()

@@ -1,0 +1,7 @@
+"""Other half of the fixture import cycle."""
+
+from . import cyc_a
+
+
+def pong():
+    return cyc_a.ping()

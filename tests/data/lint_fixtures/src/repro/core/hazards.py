@@ -1,0 +1,28 @@
+"""Fixture determinism hazards, one line per rule."""
+
+import time
+
+import numpy as np
+
+
+def stamp():
+    return time.time()  # expect-lint: D201
+
+
+def draw():
+    return np.random.rand(3)  # expect-lint: D202
+
+
+def walk():
+    out = []
+    for x in {1, 2, 3}:  # expect-lint: D203
+        out.append(x)
+    return out
+
+
+def order(xs):
+    return sorted(xs, key=id)  # expect-lint: D204
+
+
+def total():
+    return sum({0.1, 0.2, 0.3})  # expect-lint: D205

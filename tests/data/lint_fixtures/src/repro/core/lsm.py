@@ -1,0 +1,7 @@
+"""Fixture mechanism file that branches on a policy identity."""
+
+
+def pick_l0_strategy(cfg):
+    if cfg.policy == "vlsm":  # expect-lint: L102
+        return "incremental"
+    return "tiering"

@@ -1,0 +1,29 @@
+"""Fixture contract surface: a miniature CompactionPolicy base."""
+
+
+MECHANISM_PRIMITIVES = ("emit_compact_job", "merge_down")
+INDEX_QUERIES = ("fences",)
+L0_INDEX_MUTATORS = ("l0_clear",)
+
+
+class CompactionPolicy:
+    """Fixture base class.
+
+    .. contract-table-start  # expect-lint: C304
+    (this table is deliberately stale)
+    .. contract-table-end
+    """
+
+    name = ""
+
+    def default_config(self):
+        raise NotImplementedError
+
+    def level_target(self, cfg, level):
+        return 1
+
+    def compact_l0(self, tree, deps):
+        return None
+
+    def _tiering_l0(self, tree, deps):
+        return None

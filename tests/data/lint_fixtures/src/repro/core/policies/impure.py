@@ -1,0 +1,15 @@
+"""Fixture policy that reaches past the contract surface."""
+
+from .base import CompactionPolicy
+
+
+class ImpurePolicy(CompactionPolicy):
+    name = "impure"
+
+    def default_config(self):
+        return None
+
+    def compact_l0(self, tree, deps):
+        tree.seal_memtable()  # expect-lint: L103
+        tree.levels[1] = []  # expect-lint: L104
+        return None

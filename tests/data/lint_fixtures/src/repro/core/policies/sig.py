@@ -1,0 +1,28 @@
+"""Fixture contract violations: drifted signature, typo'd hook, and a
+registered policy missing its required override."""
+
+from .base import CompactionPolicy
+
+
+def register(policy):
+    """Stand-in for the real registry entry point."""
+
+
+class SigMismatchPolicy(CompactionPolicy):
+    name = "sig"
+
+    def default_config(self):
+        return None
+
+    def level_target(self, cfg):  # expect-lint: C301
+        return 2
+
+    def chain_prioriy(self, cfg):  # expect-lint: C302
+        return 0
+
+
+class NoDefaultPolicy(CompactionPolicy):  # expect-lint: C303
+    name = "nodefault"
+
+
+register(NoDefaultPolicy())

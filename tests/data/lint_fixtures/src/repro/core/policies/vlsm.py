@@ -1,0 +1,12 @@
+"""Fixture concrete policy: clean, and the L101/L102 bait (a mechanism
+file that imports this module, or mentions its registry name, is in
+violation)."""
+
+from .base import CompactionPolicy
+
+
+class VLSMFixturePolicy(CompactionPolicy):
+    name = "vlsm"
+
+    def default_config(self):
+        return None

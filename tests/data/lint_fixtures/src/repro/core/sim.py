@@ -1,0 +1,7 @@
+"""Fixture mechanism file that imports a concrete policy module."""
+
+from .policies import vlsm  # expect-lint: L101
+
+
+def engine_default():
+    return vlsm.VLSMFixturePolicy()

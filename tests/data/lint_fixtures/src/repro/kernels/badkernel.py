@@ -1,0 +1,7 @@
+"""Fixture kernel that reaches up into the engine layer."""
+
+from repro.core import lsm  # expect-lint: L105
+
+
+def kernel():
+    return lsm

@@ -145,16 +145,15 @@ def test_lazy_policy_fills_levels_with_wholesale_moves():
     assert max(j.n_in_ssts for j in mid_jobs) > 1
 
 
-def test_lazy_policy_lives_outside_the_mechanism():
-    """The sixth policy must not be special-cased by the engine."""
-    import inspect
+def test_policies_live_outside_the_mechanism():
+    """No policy may be special-cased by the engine, and no policy may
+    reach past the contract surface — enforced by the same layering
+    rules the `repro-lint` CI gate runs (L101..L106), so this test and
+    the lint can never disagree."""
+    from repro.analysis import analyze_repo
 
-    import repro.core.lsm as lsm_mod
-    import repro.core.sim as sim_mod
-    for mod in (lsm_mod, sim_mod):
-        src = inspect.getsource(mod)
-        assert "'lazy'" not in src and '"lazy"' not in src, \
-            f"{mod.__name__} special-cases the 'lazy' policy name"
+    findings = analyze_repo(families=("layering",))
+    assert findings == [], "\n".join(f.format() for f in findings)
 
 
 # -------------------------------------------------------- paranoid_checks
