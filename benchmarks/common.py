@@ -87,6 +87,12 @@ def emit(name: str, value, derived: str = "") -> None:
     """
     now = time.perf_counter()
     wall, _last_emit_t[0] = now - _last_emit_t[0], now
-    ROWS.append({"name": name, "value": value, "derived": derived,
-                 "wall_clock_s": round(wall, 3)})
+    row = {"name": name, "value": value, "derived": derived,
+           "wall_clock_s": round(wall, 3)}
+    # under REPRO_PARANOID_CHECKS=1 every row is validated against the
+    # schema repro-lint extracts from this very literal (B6xx), so a
+    # drifting emitter fails the smoke run, not just the linter
+    from repro.analysis.schemas import CSV_FAMILY, paranoid_validate_rows
+    paranoid_validate_rows([row], family=CSV_FAMILY)
+    ROWS.append(row)
     print(f"{name},{value},{derived}", flush=True)

@@ -149,7 +149,13 @@ def main() -> None:
         import json
         from pathlib import Path
 
+        from repro.analysis.schemas import (CSV_FAMILY,
+                                            paranoid_validate_rows)
+
         from .common import ROWS
+        # schema gate (no-op unless REPRO_PARANOID_CHECKS=1): rows
+        # must match the shape repro-lint extracts from common.emit
+        paranoid_validate_rows(ROWS, family=CSV_FAMILY)
         Path(args.json).write_text(json.dumps(ROWS, indent=1))
         print(f"# wrote {args.json} ({len(ROWS)} rows)")
 

@@ -8,6 +8,11 @@ and must exist on disk.  ``#anchor`` fragments pointing into a markdown
 file must match one of its headings (GitHub slug rules).  Fenced code
 blocks are ignored so example snippets aren't checked.
 
+``docs/analysis.md`` gets one extra check: the rule IDs listed in its
+catalog tables must be exactly the rules registered in
+``repro.analysis.catalog`` — an undocumented (or stale-documented) rule
+fails like a broken link.
+
 Usage (CI runs exactly this):
 
     python scripts/check_links.py README.md docs
@@ -74,6 +79,33 @@ def check_file(md: Path) -> list[str]:
     return errors
 
 
+RULE_CELL_RE = re.compile(r"^\|\s*([A-Z]\d{3})\s*\|")
+
+
+def check_rule_catalog(md: Path) -> list[str]:
+    """docs/analysis.md only: its tables must list exactly the rule IDs
+    registered in ``repro.analysis.catalog`` — no drift either way."""
+    if md.name != "analysis.md":
+        return []
+    try:
+        sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+        from repro.analysis.catalog import CATALOG
+    except Exception as e:  # pragma: no cover - env without src on path
+        print(f"check_links: rule-catalog check skipped ({e})")
+        return []
+    documented = {m.group(1) for line in markdown_lines(md)
+                  if (m := RULE_CELL_RE.match(line.strip()))}
+    registered = set(CATALOG)
+    errors = []
+    for rule in sorted(registered - documented):
+        errors.append(f"{md}: registered rule {rule} missing from the "
+                      f"rule tables")
+    for rule in sorted(documented - registered):
+        errors.append(f"{md}: rule table lists {rule}, which is not "
+                      f"registered in repro.analysis.catalog")
+    return errors
+
+
 def main(argv: list[str]) -> int:
     args = argv or ["README.md", "docs"]
     files: list[Path] = []
@@ -89,6 +121,7 @@ def main(argv: list[str]) -> int:
     errors: list[str] = []
     for md in files:
         errors.extend(check_file(md))
+        errors.extend(check_rule_catalog(md))
     for e in errors:
         print(e)
     print(f"check_links: {len(files)} files, "

@@ -16,31 +16,52 @@ mechanically, over the repo's own AST and import graph:
 * :mod:`repro.analysis.contracts` — registered policies implement the
   hook set with compatible signatures, and the generated contract table
   in ``base.py`` matches the actual hooks.
+* :mod:`repro.analysis.units` — a dimension-lattice dataflow pass over
+  the unit-suffix naming convention (``_s``/``_ms``/``_bytes``/...)
+  plus an explicit registry for the unsuffixed hot-path names: flags
+  mixed-unit arithmetic, suffix-contradicting stores, double
+  conversions, and unsuffixed dimensioned bench-row keys.
+* :mod:`repro.analysis.schemas` — statically extracts every bench-row
+  dict the emitters produce into per-family schemas and diffs them
+  against the generated table in ``docs/benchmarks.md``, the checked-in
+  ``BENCH_dbbench.json``, and each other; the same schemas gate row
+  emission at runtime under ``REPRO_PARANOID_CHECKS=1``.
 * :mod:`repro.analysis.sanitizer` — the runtime half (``REPRO_SANITIZE=1``):
   a DES schedule sanitizer asserting the scheduling-order preconditions
   the stall-gate pruning optimisations assume.
 
-CLI: ``python -m repro.analysis [--format json] [paths...]`` — exits
-non-zero on any finding not covered by the checked-in baseline
-(``.repro-lint-baseline.json``).  See ``docs/analysis.md``.
+CLI: ``python -m repro.analysis [--format json|github] [--explain RULE]
+[paths...]`` — exits non-zero on any finding not covered by the
+checked-in baseline (``.repro-lint-baseline.json``).  See
+``docs/analysis.md``.
 """
 
+from .catalog import CATALOG, RUNTIME_RULES, STATIC_RULES, explain
 from .engine import (DEFAULT_BASELINE_NAME, FAMILIES, analyze_paths,
                      analyze_repo, find_repo_root)
 from .findings import Finding, load_baseline, write_baseline
 from .sanitizer import ScheduleSanitizer, ScheduleSanitizerError, \
     maybe_sanitizer
+from .schemas import (load_schemas, paranoid_validate_rows,
+                      validate_emitted_row)
 
 __all__ = [
+    "CATALOG",
     "DEFAULT_BASELINE_NAME",
     "FAMILIES",
     "Finding",
+    "RUNTIME_RULES",
+    "STATIC_RULES",
     "ScheduleSanitizer",
     "ScheduleSanitizerError",
     "analyze_paths",
     "analyze_repo",
+    "explain",
     "find_repo_root",
     "load_baseline",
+    "load_schemas",
     "maybe_sanitizer",
+    "paranoid_validate_rows",
+    "validate_emitted_row",
     "write_baseline",
 ]

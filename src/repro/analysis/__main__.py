@@ -27,8 +27,13 @@ def main(argv: list[str] | None = None) -> int:
     parser.add_argument("--root", type=Path, default=None,
                         help="analysis root (default: the enclosing "
                              "repo)")
-    parser.add_argument("--format", choices=("text", "json"),
-                        default="text")
+    parser.add_argument("--format", choices=("text", "json", "github"),
+                        default="text",
+                        help="'github' emits ::error annotations for "
+                             "GitHub Actions")
+    parser.add_argument("--explain", metavar="RULE", default=None,
+                        help="print the catalog entry for one rule id "
+                             "(e.g. U501) and exit")
     parser.add_argument("--rules", default=None, metavar="FAM[,FAM...]",
                         help=f"rule families to run (default: all of "
                              f"{', '.join(FAMILIES)})")
@@ -43,7 +48,19 @@ def main(argv: list[str] | None = None) -> int:
     parser.add_argument("--write-contract-table", action="store_true",
                         help="regenerate the contract table in "
                              "core/policies/base.py, then exit")
+    parser.add_argument("--write-schema-table", action="store_true",
+                        help="regenerate the bench-schema table in "
+                             "docs/benchmarks.md, then exit")
     args = parser.parse_args(argv)
+
+    if args.explain:
+        from .catalog import CATALOG, explain
+        text = explain(args.explain)
+        if text is None:
+            parser.error(f"unknown rule {args.explain!r} (registered: "
+                         f"{', '.join(sorted(CATALOG))})")
+        print(text)
+        return 0
 
     root = (args.root or find_repo_root()).resolve()
     if args.write_contract_table:
@@ -55,6 +72,16 @@ def main(argv: list[str] | None = None) -> int:
         print(f"{base_path}: "
               + ("contract table rewritten" if changed
                  else "contract table already up to date"))
+        return 0
+    if args.write_schema_table:
+        from .schemas import DOC_REL, write_schema_table
+        doc_path = root / DOC_REL
+        if not doc_path.exists():
+            parser.error(f"no {DOC_REL} under {root}")
+        changed = write_schema_table(root)
+        print(f"{doc_path}: "
+              + ("schema table rewritten" if changed
+                 else "schema table already up to date"))
         return 0
 
     families = None
@@ -77,7 +104,19 @@ def main(argv: list[str] | None = None) -> int:
     fresh, known = split_baselined(findings, baseline)
     shown = findings if args.no_baseline else fresh
 
-    if args.format == "json":
+    if args.format == "github":
+        # GitHub Actions workflow annotations: one ::error per fresh
+        # finding, anchored at the file/line the web UI will show
+        for f in fresh:
+            msg = f"{f.rule} {f.message} (hint: {f.hint})"
+            msg = msg.replace("%", "%25").replace("\r", "%0D") \
+                     .replace("\n", "%0A")
+            print(f"::error file={f.path},line={f.line},"
+                  f"title=repro-lint {f.rule}::{msg}")
+        print(("FAIL: " if fresh else "OK: ")
+              + f"{len(fresh)} finding(s)"
+              + (f" ({len(known)} baselined)" if known else ""))
+    elif args.format == "json":
         print(json.dumps({
             "root": str(root),
             "families": list(families or FAMILIES),

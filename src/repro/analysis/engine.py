@@ -11,11 +11,11 @@ from __future__ import annotations
 
 from pathlib import Path
 
-from . import contracts, determinism, layering
+from . import contracts, determinism, layering, schemas, units
 from .astutil import Module, load_modules
 from .findings import Baseline, Finding
 
-FAMILIES = ("layering", "determinism", "contracts")
+FAMILIES = ("layering", "determinism", "contracts", "units", "schemas")
 DEFAULT_BASELINE_NAME = ".repro-lint-baseline.json"
 #: default analysis scope under the root
 DEFAULT_PATHS = ("src/repro",)
@@ -65,6 +65,12 @@ def analyze_paths(root: Path, paths: list[Path] | None = None,
         findings += contracts.check(
             [m for m in modules
              if m.rel.startswith(layering.POLICY_DIR)])
+    if "units" in families:
+        findings += units.check(modules)
+    if "schemas" in families:
+        # root-scoped: diffs the fixed emitter/doc/JSON inputs below
+        # the root regardless of the selected paths
+        findings += schemas.check(root)
 
     findings = [f for f in findings
                 if not _suppressed(by_rel, f)]

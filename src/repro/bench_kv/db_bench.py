@@ -591,6 +591,11 @@ def main(argv=None):
         rows.extend(frows)
         summ = frows[-1]
         print(f"db_bench.fleet_sweep: {summ}")
+    # under REPRO_PARANOID_CHECKS=1, every row must match the schema
+    # repro-lint extracts from this module's dict literals (B6xx) —
+    # emitter drift fails the smoke run, not just the linter
+    from repro.analysis.schemas import paranoid_validate_rows
+    paranoid_validate_rows(rows)
     if args.json:
         Path(args.json).write_text(json.dumps(rows, indent=1))
         print(f"wrote {args.json} ({len(rows)} rows)")

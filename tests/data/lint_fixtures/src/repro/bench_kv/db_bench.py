@@ -1,0 +1,27 @@
+"""Bench-schema fixtures: the emitters the B6xx rules diff against the
+fixture ``docs/benchmarks.md`` (B601 — stale generated table) and the
+fixture ``BENCH_dbbench.json`` (B602 — the ``alpha`` rows are missing
+``p99_get_ms``).  ``alpha`` stores seconds under the unsuffixed key
+``stall`` while ``beta`` stores milliseconds under the same name —
+the B603 cross-family unit conflict (U504 is deliberately suppressed
+on those lines; it has its own fixture in ``core/units_bad.py``).
+"""
+
+
+def alpha(n_ops: int, stall_total_s: float, wall: float) -> dict:
+    return {  # expect-lint: B602
+        "bench": "alpha",
+        "ops": n_ops,
+        "p99_get_ms": 12.5,
+        "stall": stall_total_s,  # lint-ok: U504
+        "wall_clock_s": wall,
+    }
+
+
+def beta(n_ops: int, p99_ms: float, wall: float) -> dict:
+    return {  # expect-lint: B603
+        "bench": "beta",
+        "ops": n_ops,
+        "stall": p99_ms,  # lint-ok: U504
+        "wall_clock_s": wall,
+    }

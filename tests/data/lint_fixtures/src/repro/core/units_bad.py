@@ -1,0 +1,25 @@
+"""Unit-dimension fixtures: one violation per U5xx rule.
+
+Parameter names carry the units (the same suffix convention the real
+tree uses); each function isolates exactly one rule.
+"""
+
+
+def mixed_add(p99_ms: float, stall_total_s: float) -> float:
+    return p99_ms + stall_total_s  # expect-lint: U501
+
+
+def bad_assign(stall_total_s: float) -> float:
+    lat_ms = stall_total_s  # expect-lint: U502
+    return lat_ms
+
+
+def double_convert(p99_ms: float) -> float:
+    return p99_ms * 1e3  # expect-lint: U503
+
+
+def unsuffixed_row(stall_total_s: float) -> dict:
+    return {
+        "bench": "units_bad",
+        "stall": stall_total_s,  # expect-lint: U504
+    }

@@ -23,10 +23,15 @@ import pytest
 
 from repro.analysis import (ScheduleSanitizer, ScheduleSanitizerError,
                             analyze_paths, analyze_repo, maybe_sanitizer)
+from repro.analysis import catalog, schemas
 from repro.analysis.contracts import (check_contract_table,
                                       generate_contract_table)
 from repro.analysis.astutil import load_modules
 from repro.analysis.findings import load_baseline, write_baseline
+from repro.analysis.schemas import (CSV_FAMILY, check_schema_table,
+                                    extract_variants, generate_schema_table,
+                                    paranoid_validate_rows,
+                                    validate_emitted_row)
 from repro.core import (FleetEngine, Simulator, get_policy,
                         reset_uid_counters)
 from repro.core.types import DeviceModel
@@ -34,10 +39,11 @@ from repro.core.types import DeviceModel
 ROOT = Path(__file__).resolve().parents[1]
 FIXTURES = ROOT / "tests" / "data" / "lint_fixtures"
 BASE_PY = ROOT / "src" / "repro" / "core" / "policies" / "base.py"
+BENCH_DOC = ROOT / "docs" / "benchmarks.md"
 
-ALL_RULES = {"L101", "L102", "L103", "L104", "L105", "L106",
-             "D201", "D202", "D203", "D204", "D205",
-             "C301", "C302", "C303", "C304"}
+# every statically-checkable rule must have a fixture (the S4xx runtime
+# sanitizer rules are exercised by the sanitizer tests below instead)
+ALL_RULES = set(catalog.STATIC_RULES)
 _MARKER = re.compile(r"#\s*expect-lint:\s*([A-Z]\d{3})")
 
 
@@ -57,7 +63,9 @@ def _run_cli(*args, env=None):
 
 def _expected_markers() -> set[tuple[str, str, int]]:
     expected = set()
-    for f in sorted((FIXTURES / "src").rglob("*.py")):
+    files = sorted((FIXTURES / "src").rglob("*.py")) \
+        + sorted((FIXTURES / "docs").rglob("*.md"))
+    for f in files:
         rel = f.relative_to(FIXTURES).as_posix()
         for lineno, text in enumerate(f.read_text().splitlines(), 1):
             for rule in _MARKER.findall(text):
@@ -83,6 +91,8 @@ def test_fixture_findings_match_markers_exactly():
     ("layering", {"L101", "L102", "L103", "L104", "L105", "L106"}),
     ("determinism", {"D201", "D202", "D203", "D204", "D205"}),
     ("contracts", {"C301", "C302", "C303", "C304"}),
+    ("units", {"U501", "U502", "U503", "U504"}),
+    ("schemas", {"B601", "B602", "B603"}),
 ])
 def test_each_family_fails_cli_on_fixture(family, rules):
     """Acceptance: every rule family has a fixture that makes the CLI
@@ -154,6 +164,98 @@ def test_write_contract_table_is_idempotent():
     res = _run_cli("--write-contract-table")
     assert res.returncode == 0
     assert BASE_PY.read_text() == before
+
+
+# --------------------------------------------------------- bench schemas
+def test_schema_table_is_current():
+    """B601 on the real docs/benchmarks.md: the checked-in generated
+    block must match what the extractor produces from the emitters."""
+    variants = extract_variants(ROOT)
+    assert check_schema_table(ROOT, variants) == []
+    table = generate_schema_table(variants)
+    assert "shard_sweep" in table
+    assert "run_csv" in table
+    assert "`p99_get_ms`:ms" in table
+
+
+def test_write_schema_table_is_idempotent():
+    before = BENCH_DOC.read_text()
+    res = _run_cli("--write-schema-table")
+    assert res.returncode == 0
+    assert BENCH_DOC.read_text() == before
+
+
+def _schema_inputs_copy(tmp_path: Path) -> Path:
+    """Copy the fixed inputs the schemas family diffs into a tmp root."""
+    for rel in ("src/repro/bench_kv/db_bench.py", "benchmarks/common.py",
+                "docs/benchmarks.md", "BENCH_dbbench.json"):
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        dst.write_text((ROOT / rel).read_text())
+    return tmp_path
+
+
+def test_renamed_emitter_key_fires_schema_rules(tmp_path):
+    """Acceptance: renaming an emitted key (p99_get_ms) makes both the
+    doc table (B601) and the JSON cross-check (B602) fail, each with a
+    file:line finding."""
+    root = _schema_inputs_copy(tmp_path)
+    emitter = root / "src" / "repro" / "bench_kv" / "db_bench.py"
+    src = emitter.read_text()
+    assert '"p99_get_ms"' in src
+    emitter.write_text(src.replace('"p99_get_ms"', '"p99_renamed_ms"'))
+    findings = schemas.check(root)
+    rules = {f.rule for f in findings}
+    assert {"B601", "B602"} <= rules, [f.format() for f in findings]
+    for f in findings:
+        if f.rule == "B601":
+            assert f.path == "docs/benchmarks.md" and f.line > 0
+        if f.rule == "B602":
+            assert f.path == "src/repro/bench_kv/db_bench.py"
+            assert f.line > 0
+
+
+def test_paranoid_row_validation(monkeypatch):
+    good = {"name": "x", "value": 1.0, "derived": "", "wall_clock_s": 0.1}
+    bad = {"name": "x", "value": 1.0}
+    monkeypatch.delenv("REPRO_PARANOID_CHECKS", raising=False)
+    paranoid_validate_rows([bad], family=CSV_FAMILY, root=ROOT)  # gated off
+    monkeypatch.setenv("REPRO_PARANOID_CHECKS", "1")
+    paranoid_validate_rows([good], family=CSV_FAMILY, root=ROOT)
+    with pytest.raises(ValueError, match=CSV_FAMILY):
+        paranoid_validate_rows([bad], family=CSV_FAMILY, root=ROOT)
+    # families the extractor has never seen stay free-form
+    validate_emitted_row({"bench": "no_such_family"}, root=ROOT)
+
+
+# ------------------------------------------------------------ CLI surface
+def test_explain_cli():
+    res = _run_cli("--explain", "U501")
+    assert res.returncode == 0, res.stderr
+    assert "U501" in res.stdout
+    assert "unit" in res.stdout.lower()
+    res = _run_cli("--explain", "Z999")
+    assert res.returncode == 2
+    assert "Z999" in res.stderr
+
+
+def test_explain_covers_every_rule():
+    for rule_id in catalog.CATALOG:
+        text = catalog.explain(rule_id)
+        assert text and rule_id in text
+
+
+def test_github_format_emits_error_annotations():
+    res = _run_cli("--root", str(FIXTURES), "--rules", "units",
+                   "--format", "github")
+    assert res.returncode == 1
+    assert ("::error file=src/repro/core/units_bad.py,line=9,"
+            "title=repro-lint U501::") in res.stdout
+
+
+def test_units_and_schemas_clean_on_repo():
+    res = _run_cli("--rules", "units,schemas")
+    assert res.returncode == 0, res.stdout + res.stderr
 
 
 # ------------------------------------------------------------- sanitizer
