@@ -132,12 +132,15 @@ def main() -> None:
                      row["p99_get_ms"], f"rate={row['rate_ops_s']}")
     except Exception as e:  # pragma: no cover
         print(f"# fleet_sweep skipped: {e}")
-    # serving-integration tail benchmark
+    # open-loop multi-tenant serving: goodput/shed/priority-tail numbers
+    # at and past the saturation knee, admission off vs on (full
+    # per-factor rows live in db_bench's serve_sweep output — see
+    # docs/benchmarks.md)
     try:
         from .serving_tail import bench_serving_tail
-        bench_serving_tail()
+        bench_serving_tail(120_000 if args.full else 60_000)
     except Exception as e:  # pragma: no cover
-        print(f"# serving_tail skipped: {e}")
+        print(f"# serve_sweep skipped: {e}")
     # distributed wire benchmark (fast, lowering only)
     try:
         from .compression_wire import bench_wire

@@ -1,35 +1,45 @@
-"""Serving-integration benchmark: prefix-cache index tail latency under
-insert churn, vLSM policy vs RocksDB-style tiering.
+"""Serving-integration benchmark: the serve_sweep family's CSV companion.
 
-Every admitted prompt inserts its block-hash chain into the prefix-cache
-index.  We drive that insert stream through the DES for both index
-policies — the paper's Fig 1 pathology (multi-second write stalls from
-tiering chains) would land directly on request admission latency; vLSM's
-narrow chains keep the admission path flat.
+Drives the pinned multi-tenant open-loop scenario
+(``repro.bench_kv.db_bench.make_serve_spec``) through the DES with the
+admission controller off and on, and emits the knee-side numbers:
+goodput, shed fraction, and the high-priority tenant's P99.9 past the
+saturation knee.  The paper's Fig 1 pathology (multi-second write
+stalls landing on foreground requests) shows up here as the open-loop
+collapse of the admission-off curve; the controller buys the
+priority-0 tenant a bounded tail by shedding low-priority work
+(``shed_frac`` > 0) instead of queueing it.
+
+Full per-factor rows — every policy, every load factor, per-tenant
+ledgers — live in db_bench's ``serve_sweep`` output
+(``--bench serve_sweep``); see docs/benchmarks.md for the row schema.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
-from .common import SCALE, emit
-from repro.bench_kv import make_load_a, run_ycsb, sustainable_throughput
-from repro.core import LSMConfig
+from .common import emit
 
 
 def bench_serving_tail(n: int = 60_000):
-    # key stream = 64-bit block hashes (high-entropy uniform, like
-    # PrefixCache._hash_tokens output)
-    spec = make_load_a(n)
-    for name, cfg in (
-            ("vlsm", LSMConfig.vlsm_default(scale=SCALE).with_(kv_size=64)),
-            ("rocksdb", LSMConfig.rocksdb_default(scale=SCALE).with_(kv_size=64))):
-        sus = sustainable_throughput(cfg, spec, scale=SCALE)
-        r = run_ycsb(cfg, spec, rate=0.6 * sus, scale=SCALE)
-        emit(f"serving.index_p99_ms.{name}", round(r.sim.p99 * 1e3, 3),
-             "prefix-cache insert admission tail")
-        emit(f"serving.index_stall_max_s.{name}", round(r.sim.stall_max, 3),
-             "")
+    # quick sizes for --full too: the CSV row is a smoke-level summary,
+    # the real sweep is db_bench's (n retained for run.py's --full call)
+    from repro.bench_kv.db_bench import serve_sweep_bench
+    full = n > 60_000
+    rows = serve_sweep_bench(
+        ["vlsm", "rocksdb"],
+        duration_s=4.0 if full else 1.5,
+        population=8_000 if full else 3_000,
+        factors=(1.0, 3.0))
+    for r in rows:
+        prio = next(t for t in r["per_tenant"] if t["priority"] == 0)
+        emit(f"serve.goodput_ops_s.{r['policy']}.adm_{r['admission']}"
+             f".x{r['load_factor']}",
+             r["goodput_ops_s"],
+             f"shed={r['shed_frac']};offered={r['offered_ops_s']}")
+        emit(f"serve.prio_p999_ms.{r['policy']}.adm_{r['admission']}"
+             f".x{r['load_factor']}",
+             prio["p999_ms"],
+             f"slo_viol={prio['slo_violation_frac']}")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ the five seed policy names.
 
 from . import policies
 from .fleet import (FleetEngine, PendingRun, SweepPoint, fleet_sweep,
-                    reset_uid_counters, serial_sweep)
+                    reset_uid_counters, serial_sweep, traffic_curve)
 from .level_index import LevelIndex
 from .lsm import Job, LSMTree
 from .memtable import Memtable
@@ -27,7 +27,7 @@ from .policies import CompactionPolicy, get_policy
 from .shard import ShardRouter, ShardedStore
 from .sim import SimResult, Simulator
 from .sst import SST
-from .stats import ChainRecord, FleetStats, Stats
+from .stats import ChainRecord, FleetStats, Stats, TenantLedger
 from .types import (DeviceModel, LSMConfig, OpKind, Policy, RequestBatch,
                     ResultBatch)
 
@@ -36,6 +36,6 @@ __all__ = [
     "FleetStats", "Job", "LSMConfig", "LSMTree", "LevelIndex", "Memtable",
     "OpKind", "PendingRun", "Policy", "RequestBatch", "ResultBatch", "SST",
     "ShardRouter", "ShardedStore", "SimResult", "Simulator", "Stats",
-    "SweepPoint", "fleet_sweep", "get_policy", "policies",
-    "reset_uid_counters", "serial_sweep",
+    "SweepPoint", "TenantLedger", "fleet_sweep", "get_policy", "policies",
+    "reset_uid_counters", "serial_sweep", "traffic_curve",
 ]

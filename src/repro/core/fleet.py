@@ -357,6 +357,31 @@ class FleetEngine(Simulator):
         return self.finalize(deps)
 
 
+def traffic_curve(eng: "FleetEngine", op_types: np.ndarray,
+                  keys: np.ndarray, scan_lens: np.ndarray | None,
+                  arrival_grid: list[np.ndarray],
+                  backend: str = "numpy") -> list[SimResult]:
+    """An offered-load axis over ONE structural replay.
+
+    The serving layer's load curves scale every tenant's rate by a
+    common factor, which compresses the arrival schedule but leaves the
+    op stream (and hence store structure) invariant — exactly the
+    amortization the two-phase split buys: phase A once, one cheap
+    temporal pass + Lindley finalize per factor.  ``eng`` must be
+    freshly constructed (callers pair this with ``reset_uid_counters``);
+    per-pass results share its Stats like ``fleet_sweep`` points do.
+    """
+    from repro.kernels.lindley_scan.ops import lindley_batch_np
+    eng.prepare_structural(op_types, keys, scan_lens)
+    out: list[SimResult] = []
+    for arr in arrival_grid:
+        pd = eng.temporal_pass(arr)
+        deps = lindley_batch_np([q[0] for q in pd.queues],
+                                [q[1] for q in pd.queues], backend=backend)
+        out.append(eng.finalize(deps, pending=pd))
+    return out
+
+
 # ---------------------------------------------------------------- sweeps
 def reset_uid_counters() -> None:
     """Rewind the module-level SST/job/chain uid counters.

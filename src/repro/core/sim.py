@@ -693,6 +693,22 @@ class Simulator:
             makespan = max(makespan, float(departures[-1]))
         return self._make_result(st, latency, makespan)
 
+    def serve(self, spec, *, load_factor: float = 1.0):
+        """Drive the store from a ``TrafficSpec`` (open-loop serving).
+
+        The serving layer (``repro.serving.traffic``) materializes the
+        spec's tenants into one interleaved arrival schedule, runs the
+        admission pre-pass, and feeds the admitted stream through
+        :meth:`run` — so ``FleetEngine`` inherits this entry point and
+        both engines accept the same spec.  With admission disabled the
+        result is byte-identical to :meth:`run` on the materialized
+        arrays (the closed↔open parity gate).  Returns a
+        ``ServeResult`` (per-tenant ledgers, goodput, SLO accounting).
+        """
+        # function-scoped: serving sits above core in the layer order
+        from ..serving.traffic import serve as _serve
+        return _serve(self, spec, load_factor=load_factor)
+
     # ------------------------------------------------------------------
     def _advance_clock(self, shard: int, D: float, idx: np.ndarray,
                        op_types, keys, scan_lens, regions, get_reads,

@@ -60,6 +60,65 @@ class ChainRecord:
         return self.t_finish - self.t_start
 
 
+@dataclass
+class TenantLedger:
+    """Per-tenant serving ledger (open-loop traffic layer).
+
+    Written by ``repro.serving.traffic.serve`` into the owning shard's
+    :class:`Stats` (one ledger per tenant per shard), so the fleet view
+    aggregates tenants across shards like every other counter.  The
+    conservation invariant — every offered op got exactly one verdict —
+    is ``ops_offered == ops_admitted + ops_shed + ops_throttled``,
+    re-asserted at runtime under ``cfg.paranoid_checks``.
+    """
+
+    name: str
+    priority: int = 0
+    slo_ms: float = 0.0
+    ops_offered: int = 0
+    ops_admitted: int = 0
+    ops_shed: int = 0
+    ops_throttled: int = 0
+    slo_violations: int = 0         # admitted ops finishing past slo_ms
+
+    @property
+    def shed_frac(self) -> float:
+        return self.ops_shed / max(1, self.ops_offered)
+
+    @property
+    def throttled_frac(self) -> float:
+        return self.ops_throttled / max(1, self.ops_offered)
+
+    @property
+    def slo_violation_frac(self) -> float:
+        return self.slo_violations / max(1, self.ops_admitted)
+
+    def goodput_ops_s(self, duration_s: float) -> float:
+        """Admitted ops that met the SLO, per second of measured time."""
+        return (self.ops_admitted - self.slo_violations) \
+            / max(duration_s, 1e-12)
+
+    def merge_from(self, other: "TenantLedger") -> "TenantLedger":
+        assert self.name == other.name, \
+            f"merging ledgers of different tenants ({self.name} vs " \
+            f"{other.name})"
+        for f in ("ops_offered", "ops_admitted", "ops_shed",
+                  "ops_throttled", "slo_violations"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        return self
+
+    def summary(self) -> dict:
+        return {
+            "tenant": self.name,
+            "priority": self.priority,
+            "slo_ms": self.slo_ms,
+            "ops_offered": self.ops_offered,
+            "shed_frac": round(self.shed_frac, 4),
+            "throttled_frac": round(self.throttled_frac, 4),
+            "slo_violation_frac": round(self.slo_violation_frac, 4),
+        }
+
+
 # CPU-cycle proxy coefficients (constant across all policies, so ratios are
 # meaningful): cycles per merged key, per overlap probe, per SST created,
 # per manifest flush, per op baseline.
@@ -100,6 +159,14 @@ class Stats:
     vsst_poor_bytes: int = 0
     compactions_per_level: dict[int, int] = field(default_factory=dict)
     level_bytes_moved: dict[int, int] = field(default_factory=dict)
+    # serving-layer admission accounting (repro.serving): offered traffic
+    # ops routed to this shard and their verdicts; ops never silently
+    # dropped — shed + throttled + admitted == offered per tenant
+    ops_offered: int = 0
+    ops_shed: int = 0
+    ops_throttled: int = 0
+    slo_violations: int = 0
+    tenants: dict[str, TenantLedger] = field(default_factory=dict)
 
     # ------------------------------------------------------------- derived
     @property
@@ -232,13 +299,18 @@ class Stats:
         process-global so the merged index stays collision-free), per-level
         dicts merge-add.  Returns self."""
         for f in dataclasses.fields(Stats):
-            if f.name in ("chains", "chain_index",
+            if f.name in ("chains", "chain_index", "tenants",
                           "compactions_per_level", "level_bytes_moved"):
                 continue
             setattr(self, f.name,
                     getattr(self, f.name) + getattr(other, f.name))
         self.chains.extend(other.chains)
         self.chain_index.update(other.chain_index)
+        for name, led in other.tenants.items():
+            if name in self.tenants:
+                self.tenants[name].merge_from(led)
+            else:
+                self.tenants[name] = dataclasses.replace(led)
         for lvl, n in other.compactions_per_level.items():
             self.compactions_per_level[lvl] = \
                 self.compactions_per_level.get(lvl, 0) + n
@@ -271,6 +343,19 @@ class Stats:
                 "scan_blocks": self.scan_blocks,
                 "tombstones_dropped": self.tombstones_dropped,
                 "tombstones_live": self.tombstones_live,
+            })
+        if self.ops_offered:
+            admitted = (self.ops_offered - self.ops_shed
+                        - self.ops_throttled)
+            out.update({
+                "ops_offered": self.ops_offered,
+                "ops_shed": self.ops_shed,
+                "ops_throttled": self.ops_throttled,
+                "shed_frac": round(self.ops_shed / self.ops_offered, 4),
+                "slo_violation_frac": round(
+                    self.slo_violations / max(1, admitted), 4),
+                "per_tenant": [self.tenants[k].summary()
+                               for k in sorted(self.tenants)],
             })
         return out
 

@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import decode_step, forward, init_cache, init_model
-from repro.serving import PagePool, PrefixCache
+from repro.serving import PagePool, PrefixCache, TokenBucket, poisson_arrivals
 
 
 def make_requests(n: int, vocab: int, *, prefix_len: int = 128,
@@ -41,7 +41,8 @@ def make_requests(n: int, vocab: int, *, prefix_len: int = 128,
 
 def run(arch: str, *, smoke: bool = True, n_requests: int = 8,
         decode_tokens: int = 16, block_tokens: int = 32,
-        max_seq: int = 512, seed: int = 0) -> dict:
+        max_seq: int = 512, seed: int = 0, rate_ops_s: float = 50.0,
+        limit_ops_s: float = 0.0, burst_ops: float = 4.0) -> dict:
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.smoke()
@@ -58,10 +59,22 @@ def run(arch: str, *, smoke: bool = True, n_requests: int = 8,
     step = jax.jit(lambda p, t, pos, c: decode_step(cfg, p, t, pos, c))
 
     reqs = make_requests(n_requests, cfg.vocab_size, seed=seed)
+    # open-loop arrival schedule (repro.serving.traffic's generator) paces
+    # the admission clock: the token bucket refills along the seeded
+    # Poisson timeline, not the prefill/decode wall clock, so the
+    # admitted/rejected split is deterministic per (seed, rate, limit)
+    arrivals = poisson_arrivals(n_requests, rate_ops_s,
+                                np.random.default_rng(seed + 1))
+    bucket = TokenBucket(rate_ops_s=limit_ops_s, burst_ops=burst_ops)
     stats = {"prefix_hits": 0, "tokens_prefilled": 0, "tokens_reused": 0,
-             "latency_ms": []}
+             "requests_offered": n_requests, "requests_admitted": 0,
+             "requests_rejected": 0, "latency_ms": []}
     outputs = []
     for r_id, tokens in enumerate(reqs):
+        if not bucket.try_admit(float(arrivals[r_id])):
+            stats["requests_rejected"] += 1
+            continue
+        stats["requests_admitted"] += 1
         t0 = time.monotonic()
         matched, _pages = pcache.match(tokens)
         stats["tokens_reused"] += matched
@@ -94,8 +107,9 @@ def run(arch: str, *, smoke: bool = True, n_requests: int = 8,
         stats["latency_ms"].append((time.monotonic() - t0) * 1e3)
 
     stats["prefix_cache"] = pcache.stats()
-    stats["p50_ms"] = float(np.percentile(stats["latency_ms"], 50))
-    stats["p99_ms"] = float(np.percentile(stats["latency_ms"], 99))
+    lat = stats["latency_ms"]
+    stats["p50_ms"] = float(np.percentile(lat, 50)) if lat else 0.0
+    stats["p99_ms"] = float(np.percentile(lat, 99)) if lat else 0.0
     return {"outputs": outputs, "stats": stats}
 
 
@@ -104,11 +118,20 @@ def main():
     ap.add_argument("--arch", default="qwen3_1_7b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--decode", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="offered request rate (Poisson, ops/s)")
+    ap.add_argument("--limit", type=float, default=0.0,
+                    help="admission token-bucket rate (ops/s; 0 = off)")
+    ap.add_argument("--burst", type=float, default=4.0,
+                    help="admission token-bucket burst size (ops)")
     args = ap.parse_args()
     out = run(args.arch, n_requests=args.requests,
-              decode_tokens=args.decode)
+              decode_tokens=args.decode, rate_ops_s=args.rate,
+              limit_ops_s=args.limit, burst_ops=args.burst)
     s = out["stats"]
-    print(f"served {args.requests} requests; prefix hits {s['prefix_hits']}"
+    print(f"served {s['requests_admitted']}/{s['requests_offered']} requests"
+          f" ({s['requests_rejected']} rejected);"
+          f" prefix hits {s['prefix_hits']}"
           f" reused {s['tokens_reused']} tok; p50 {s['p50_ms']:.0f}ms"
           f" p99 {s['p99_ms']:.0f}ms")
     print("prefix cache:", s["prefix_cache"])

@@ -1,0 +1,310 @@
+"""Open-loop traffic layer: parity gates and generator properties.
+
+The load-bearing invariant: with admission disabled the open loop is a
+*view* over the closed-loop engines, not a second code path —
+``serve`` must be byte-identical (latencies, stalls, chain ledger) to
+handing the materialized arrays to ``run`` directly, for every
+registered policy on both engines.  With admission on, the verdicts are
+a deterministic pre-pass, so serial and fleet engines must still agree
+op for op.  The generator properties (seeded determinism, empirical
+rates, over-dispersion of the bursty process, interleave order, token
+bucket window cap, verdict conservation) pin the traffic layer's
+statistical contract.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (DeviceModel, FleetEngine, Simulator, get_policy,
+                        reset_uid_counters)
+from repro.serving import (ADMIT, SHED, THROTTLE, AdmissionConfig,
+                           TenantSpec, TokenBucket, TrafficSpec,
+                           bursty_arrivals, materialize, poisson_arrivals,
+                           serve, serve_grid)
+
+SCALE = 1 << 17
+DEV = DeviceModel.scaled(1 / 1024)
+POLICIES = ("vlsm", "rocksdb", "rocksdb_io", "adoc", "lsmi", "lazy")
+
+
+def _one_tenant_spec(arrival="deterministic", admission=None, seed=11):
+    return TrafficSpec(
+        tenants=(TenantSpec("t0", rate_ops_s=3_000.0, mix="ycsb_a",
+                            arrival=arrival, priority=1, slo_ms=50.0),),
+        duration_s=1.2, population=3_000, seed=seed, settle_s=5.0,
+        admission=admission)
+
+
+def _shedding_spec(seed=11):
+    """Three tenants hot enough to trip both throttling and shedding."""
+    return TrafficSpec(
+        tenants=(
+            TenantSpec("prio", rate_ops_s=400.0, mix="ycsb_b",
+                       arrival="poisson", priority=0, slo_ms=25.0),
+            TenantSpec("mid", rate_ops_s=1_500.0, mix="ycsb_a",
+                       arrival="bursty", priority=1, slo_ms=50.0,
+                       limit_ops_s=1_200.0, burst_ops=32.0),
+            TenantSpec("bulk", rate_ops_s=2_500.0, mix="load",
+                       arrival="poisson", priority=2, slo_ms=200.0),
+        ),
+        duration_s=1.2, population=3_000, seed=seed, settle_s=5.0,
+        admission=AdmissionConfig(max_queue_delay_s=0.02))
+
+
+def _chain_ledger(engine):
+    """The per-shard chain ledger, as comparable tuples."""
+    return [[(c.chain_id, c.trigger, c.length, c.width, c.width_bytes,
+              c.n_jobs, round(c.t_start, 12), round(c.t_finish, 12),
+              round(c.stall_s, 12)) for c in st.chains]
+            for st in engine.shard_stats]
+
+
+# ------------------------------------------------- closed↔open parity
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("engine_cls", (Simulator, FleetEngine),
+                         ids=("serial", "fleet"))
+def test_closed_open_parity(policy, engine_cls):
+    """Deterministic arrivals, one tenant, admission disabled: ``serve``
+    is byte-identical to ``run`` on the same materialized arrays —
+    latencies, stall events, and the chain ledger."""
+    cfg = get_policy(policy).default_config(scale=SCALE).with_(n_shards=2)
+    spec = _one_tenant_spec("deterministic")
+    stream = materialize(spec)
+
+    reset_uid_counters()
+    closed = engine_cls(cfg, DEV)
+    r_closed = closed.run(stream.op_types, stream.keys, stream.arrivals,
+                          stream.scan_lens)
+
+    reset_uid_counters()
+    open_ = engine_cls(cfg, DEV)
+    sr = open_.serve(spec)
+
+    assert np.array_equal(sr.res.latency, r_closed.latency)
+    assert sr.res.stall_events == r_closed.stall_events
+    assert sr.res.n_stalls == r_closed.n_stalls
+    assert np.array_equal(sr.res.get_reads, r_closed.get_reads)
+    assert _chain_ledger(open_) == _chain_ledger(closed)
+    # and the ledgers account for every offered op as admitted
+    (led,) = sr.tenants
+    assert led.ops_offered == led.ops_admitted == stream.n_offered
+    assert led.ops_shed == led.ops_throttled == 0
+
+
+@pytest.mark.parametrize("policy", ("vlsm", "rocksdb"))
+def test_fleet_matches_serial_under_shedding(policy):
+    """Poisson arrivals + active admission: both engines receive the
+    same admitted stream (verdicts byte-equal) and agree on it."""
+    cfg = get_policy(policy).default_config(scale=SCALE).with_(n_shards=2)
+    spec = _shedding_spec()
+
+    reset_uid_counters()
+    sr_ser = Simulator(cfg, DEV).serve(spec)
+    reset_uid_counters()
+    sr_fle = FleetEngine(cfg, DEV).serve(spec)
+
+    assert np.array_equal(sr_ser.verdicts, sr_fle.verdicts)
+    assert sr_ser.shed_frac > 0.0          # the controller actually acted
+    assert sr_ser.throttled_frac > 0.0     # ...and so did a token bucket
+    assert sr_ser.res.stall_events == sr_fle.res.stall_events
+    assert float(np.max(np.abs(sr_fle.res.latency
+                               - sr_ser.res.latency))) < 1e-9
+    assert [t.summary() for t in sr_ser.tenants] \
+        == [t.summary() for t in sr_fle.tenants]
+
+
+def test_serve_grid_matches_per_factor_serve():
+    """The amortized admission-off grid (one structural replay, one
+    temporal pass per factor) equals fresh per-factor serial serves."""
+    cfg = get_policy("vlsm").default_config(scale=SCALE).with_(n_shards=2)
+    spec = _one_tenant_spec("poisson")
+    factors = (0.5, 2.0)
+    grid = serve_grid(cfg, DEV, spec, factors)
+    for f, sr_grid in zip(factors, grid):
+        reset_uid_counters()
+        sr = Simulator(cfg, DEV).serve(spec, load_factor=f)
+        assert float(np.max(np.abs(sr_grid.res.latency
+                                   - sr.res.latency))) < 1e-9
+        assert sr_grid.res.stall_events == sr.res.stall_events
+
+
+# ------------------------------------------------ generator properties
+
+def test_materialize_is_deterministic():
+    spec = _shedding_spec()
+    a, b = materialize(spec), materialize(spec)
+    for f in ("op_types", "keys", "arrivals", "scan_lens", "tenant_ids",
+              "tenant_seq"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    c = materialize(TrafficSpec(**{**vars(spec), "seed": spec.seed + 1}))
+    assert not np.array_equal(a.arrivals, c.arrivals)
+
+
+def test_poisson_empirical_rate():
+    rng = np.random.default_rng(0)
+    rate, n = 2_000.0, 40_000
+    arr = poisson_arrivals(n, rate, rng)
+    assert np.all(np.diff(arr) > 0)
+    emp = n / arr[-1]
+    assert abs(emp - rate) / rate < 0.05
+
+
+def test_bursty_overdispersed_vs_poisson():
+    """Index of dispersion of windowed counts: the on-off superposition
+    must be over-dispersed relative to Poisson at the same mean rate."""
+    rate, n, win_s = 2_000.0, 40_000, 0.05
+
+    def iod(arr):
+        t_end = arr[-1]
+        counts = np.bincount((arr / win_s).astype(np.int64),
+                             minlength=int(t_end / win_s))[:-1]
+        return counts.var() / counts.mean()
+
+    iod_p = iod(poisson_arrivals(n, rate, np.random.default_rng(1)))
+    iod_b = iod(bursty_arrivals(n, rate, np.random.default_rng(1)))
+    assert iod_p < 2.0                 # Poisson: IoD ≈ 1
+    assert iod_b > 2.0 * iod_p         # bursty: clearly over-dispersed
+
+
+def test_interleave_preserves_order():
+    """Global stream is arrival-sorted; within each tenant the generated
+    sequence order survives the interleave (stable sort invariant)."""
+    stream = materialize(_shedding_spec())
+    assert np.all(np.diff(stream.arrivals) >= 0)
+    for ti in np.unique(stream.tenant_ids[stream.tenant_ids >= 0]):
+        seq = stream.tenant_seq[stream.tenant_ids == ti]
+        assert np.all(np.diff(seq) == 1)
+        per_tenant_arr = stream.arrivals[stream.tenant_ids == ti]
+        assert np.all(np.diff(per_tenant_arr) >= 0)
+
+
+def test_token_bucket_window_cap():
+    """Over any window the bucket admits at most burst + rate * span."""
+    rng = np.random.default_rng(5)
+    rate, burst = 100.0, 8.0
+    times = np.sort(rng.uniform(0.0, 4.0, size=3_000))
+    bucket = TokenBucket(rate_ops_s=rate, burst_ops=burst)
+    admitted = np.array([bucket.try_admit(float(t)) for t in times])
+    t_adm = times[admitted]
+    assert t_adm.shape[0] <= burst + rate * times[-1]
+    # sliding windows, not just the full span
+    for w in (0.1, 0.5, 1.0):
+        counts = np.array([((t_adm >= t) & (t_adm < t + w)).sum()
+                           for t in np.arange(0.0, 4.0 - w, w / 2)])
+        assert counts.max() <= burst + rate * w + 1
+    # disabled bucket admits everything
+    assert all(TokenBucket(0.0).try_admit(float(t)) for t in times)
+
+
+def test_verdict_conservation():
+    """admitted + shed + throttled == offered, per tenant and globally
+    (also re-asserted at runtime by the paranoid checks in serve)."""
+    cfg = get_policy("vlsm").default_config(scale=SCALE).with_(n_shards=2)
+    assert cfg.paranoid_checks          # conftest exports the env knob
+    reset_uid_counters()
+    sr = Simulator(cfg, DEV).serve(_shedding_spec())
+    for led in sr.tenants:
+        assert led.ops_admitted + led.ops_shed + led.ops_throttled \
+            == led.ops_offered
+    n_verdicts = np.bincount(sr.verdicts[sr.stream.tenant_ids >= 0],
+                             minlength=3)
+    assert n_verdicts.sum() == sr.offered_ops
+    assert n_verdicts[SHED] == sum(t.ops_shed for t in sr.tenants)
+    assert n_verdicts[THROTTLE] == sum(t.ops_throttled for t in sr.tenants)
+    # shed/throttled ops never reached the engine, admitted all did
+    assert sr.res.latency.shape[0] \
+        == int((sr.verdicts == ADMIT).sum())
+    # priority ordering: the floor tenant is never shed
+    assert sr.tenants[0].ops_shed == 0
+    assert sr.tenants[2].shed_frac >= sr.tenants[1].shed_frac
+
+
+def test_admission_counters_land_in_stats():
+    """Per-(tenant, shard) ledgers and scalar counters ride the engine's
+    Stats, so FleetStats-style aggregation sees admission like any other
+    counter."""
+    cfg = get_policy("vlsm").default_config(scale=SCALE).with_(n_shards=2)
+    reset_uid_counters()
+    sim = Simulator(cfg, DEV)
+    sr = sim.serve(_shedding_spec())
+    total_offered = sum(st.ops_offered for st in sim.shard_stats)
+    assert total_offered == sr.offered_ops
+    assert sum(st.ops_shed for st in sim.shard_stats) \
+        == sum(t.ops_shed for t in sr.tenants)
+    merged = {}
+    for st in sim.shard_stats:
+        for name, led in st.tenants.items():
+            if name in merged:
+                merged[name].merge_from(led)
+            else:
+                import dataclasses
+                merged[name] = dataclasses.replace(led)
+        if st.ops_offered:
+            assert "per_tenant" in st.summary()
+    for led, glob in zip(sr.tenants, merged.values()):
+        assert led.summary() == glob.summary()
+
+
+@pytest.mark.slow
+def test_full_serve_matrix():
+    """The un-quick serve matrix: every registered policy × the full
+    factor axis × both admission arms.  Past the knee, every policy's
+    admission arm sheds (never the priority-0 tenant) and beats the
+    open loop's priority-0 tail.  Excluded from the default run
+    (pyproject addopts); ``pytest -m slow``."""
+    from repro.bench_kv.db_bench import SERVE_FACTORS, serve_sweep_bench
+    from repro.core.policies import names as policy_names
+    rows = serve_sweep_bench(list(policy_names()),
+                             duration_s=4.0, population=8_000,
+                             factors=SERVE_FACTORS)
+    assert len(rows) == len(policy_names()) * 2 * len(SERVE_FACTORS)
+    top = max(SERVE_FACTORS)
+    for nm in policy_names():
+        arm = {r["admission"]: r for r in rows
+               if r["policy"] == nm and r["load_factor"] == top}
+        prio_on = next(t for t in arm["on"]["per_tenant"]
+                       if t["priority"] == 0)
+        prio_off = next(t for t in arm["off"]["per_tenant"]
+                        if t["priority"] == 0)
+        assert arm["off"]["shed_frac"] == 0.0
+        assert arm["on"]["shed_frac"] > 0.1, nm
+        assert prio_on["shed_frac"] == 0.0, nm
+        assert prio_on["p999_ms"] <= prio_off["p999_ms"], nm
+        assert prio_on["slo_violation_frac"] \
+            <= prio_off["slo_violation_frac"], nm
+
+
+# --------------------------------------------------- the pinned knee
+
+def test_admission_prevents_collapse_past_knee():
+    """The acceptance scenario (db_bench's pinned serve_sweep spec) at a
+    past-knee load factor: open loop collapses (the priority-0 tenant
+    blows its SLO), admission sheds low-priority work instead
+    (shed_frac > 0) and keeps the priority-0 tail bounded."""
+    from repro.bench_kv.db_bench import make_serve_spec
+    cfg = get_policy("vlsm").default_config(scale=1 << 18).with_(n_shards=2)
+    dev = DeviceModel.scaled((1 << 18) / (64 << 20))
+
+    reset_uid_counters()
+    off = Simulator(cfg, dev).serve(
+        make_serve_spec(duration_s=1.5, population=3_000, admission=False),
+        load_factor=3.0)
+    reset_uid_counters()
+    on = Simulator(cfg, dev).serve(
+        make_serve_spec(duration_s=1.5, population=3_000, admission=True),
+        load_factor=3.0)
+
+    prio_off, prio_on = off.tenants[0], on.tenants[0]
+    p999_off = float(np.percentile(off.tenant_latency(0), 99.9)) * 1e3
+    p999_on = float(np.percentile(on.tenant_latency(0), 99.9)) * 1e3
+    # open loop: past the knee the high-priority tail is SLO-busted
+    assert off.shed_frac == 0.0
+    assert p999_off > 2 * prio_off.slo_ms
+    assert prio_off.slo_violation_frac > 0.2
+    # admission: real shedding, priority-0 never shed, tail bounded
+    assert on.shed_frac > 0.1
+    assert prio_on.ops_shed == 0
+    assert p999_on < p999_off / 2
+    assert prio_on.slo_violation_frac < 0.05
+    assert on.goodput_ops_s > 0.5 * off.goodput_ops_s
