@@ -26,6 +26,10 @@ def main() -> None:
                          "from the repro.core.policies registry")
     ap.add_argument("--seed", type=int, default=7,
                     help="base RNG seed for the db_bench-backed sections")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="sweep-executor fork-pool size for the "
+                         "fleet_sweep section (1 = in-process; rows are "
+                         "byte-identical at every worker count)")
     ap.add_argument("--sanitize", action="store_true",
                     help="run every simulation under the DES schedule "
                          "sanitizer (REPRO_SANITIZE=1; see "
@@ -116,7 +120,8 @@ def main() -> None:
         from .common import SCALE, emit
         frows = fleet_sweep_bench(resolve_names(args.policy), 6_000, 8_000,
                                   scale=SCALE, rates=FLEET_RATES_QUICK,
-                                  shard_counts=(1, 4), seed=args.seed)
+                                  shard_counts=(1, 4), seed=args.seed,
+                                  workers=args.workers)
         summary = frows[-1]
         emit("db_bench.fleet_sweep.speedup", summary["speedup"],
              f"runs={summary['runs']};"

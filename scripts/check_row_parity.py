@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Assert two bench-row JSON dumps are identical modulo wall-clock.
+
+CI runs the fleet_sweep smoke twice — ``--workers 1`` and ``--workers 2``
+— and pipes both dumps through this: the sweep executor's determinism
+gate is that worker count may change ONLY the timing fields.  Exits 1
+with a per-row diff on any other divergence.
+
+    PYTHONPATH=src python scripts/check_row_parity.py a.json b.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+#: timing / machine-dependent keys a worker-count change may alter
+VOLATILE = frozenset({
+    "wall_clock_s", "fleet_wall_s", "serial_wall_s", "speedup",
+    "structural_s", "temporal_s", "lindley_s", "finalize_s", "cache_hit",
+    "executor_wall_s", "serial_equiv_s", "cache_hits", "cache_misses",
+    "tasks", "workers",
+})
+
+
+def strip(row):
+    if isinstance(row, dict):
+        return {k: strip(v) for k, v in sorted(row.items())
+                if k not in VOLATILE}
+    if isinstance(row, list):
+        return [strip(v) for v in row]
+    return row
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    a = json.loads(open(argv[1]).read())
+    b = json.loads(open(argv[2]).read())
+    if len(a) != len(b):
+        print(f"row-count mismatch: {argv[1]} has {len(a)}, "
+              f"{argv[2]} has {len(b)}")
+        return 1
+    bad = 0
+    for i, (ra, rb) in enumerate(zip(a, b)):
+        sa, sb = strip(ra), strip(rb)
+        if sa != sb:
+            bad += 1
+            keys = sorted(set(sa) | set(sb))
+            diff = [k for k in keys if sa.get(k) != sb.get(k)]
+            print(f"row {i} (bench={ra.get('bench')}) differs on {diff}")
+            for k in diff[:5]:
+                print(f"  {k}: {sa.get(k)!r} != {sb.get(k)!r}")
+    if bad:
+        print(f"PARITY FAIL: {bad}/{len(a)} rows differ beyond "
+              f"volatile keys")
+        return 1
+    print(f"parity OK: {len(a)} rows identical modulo {len(VOLATILE)} "
+          f"volatile keys")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

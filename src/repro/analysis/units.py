@@ -92,6 +92,16 @@ NAME_REGISTRY: dict[str, str] = {
     "busy": DIMENSIONLESS,    # busy-server count (sim.py BUSY_ALPHA path)
     "throughput": OPS_PER_S,
     "ops": OPS,               # bench-row op counts ("ops": n_ops)
+    # sweep-executor phase timing (core/sweeps.py PointTiming): the
+    # ``_s`` suffix already resolves these, but the executor's bench-row
+    # contract is pinned here explicitly so renames surface as registry
+    # drift, not silent unit loss.
+    "structural_s": SECONDS,      # phase A (structural replay) wall
+    "temporal_s": SECONDS,        # per-schedule temporal-pass wall
+    "lindley_s": SECONDS,         # per-schedule Lindley-scan wall
+    "finalize_s": SECONDS,        # per-schedule finalize wall
+    "executor_wall_s": SECONDS,   # perf_trajectory: executor wall-clock
+    "serial_equiv_s": SECONDS,    # perf_trajectory: summed task compute
 }
 
 #: callables whose *return* unit is fixed (matched on the terminal

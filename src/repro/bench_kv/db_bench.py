@@ -356,30 +356,36 @@ def fleet_sweep_bench(policies: list[str], n_ops: int = 30_000,
                       shard_counts: tuple[int, ...] = None,
                       settle_s: float = 10.0, seed: int = 7,
                       backend: str = "numpy",
-                      serial_baseline: bool = True) -> list[dict]:
-    """Policy × shard-count × arrival-rate matrix through the batched
-    fleet engine (``repro.core.fleet``), with the serial heap-loop as
-    timed baseline and parity oracle.
+                      serial_baseline: bool = True,
+                      workers: int = 1, cache=None) -> list[dict]:
+    """Policy × shard-count × arrival-rate matrix through the sweep
+    executor (``repro.core.sweeps``) over the batched fleet engine,
+    with the serial heap-loop as timed baseline and parity oracle.
 
-    Every (policy, shard count) point shares ONE structural replay; each
-    rate on the load curve is a cheap temporal pass over it, and the
-    whole matrix's latency accounting is batched Lindley programs over
-    every (point, rate, shard) queue.  The serial baseline replays the
-    full heap loop per (point, rate) — the paper-methodology cost of
-    sweeping a fixed-rate load curve one run at a time.
+    Every (policy, shard count) point shares ONE structural replay (or
+    skips it on a structural-cache hit); each rate on the load curve is
+    a cheap temporal pass over it.  ``workers > 1`` dispatches points
+    over the executor's fork pool — rows are byte-identical at every
+    worker count (namespace-isolated uid streams).  The serial baseline
+    replays the full heap loop per (point, rate) — the
+    paper-methodology cost of sweeping a fixed-rate load curve one run
+    at a time — parallelized over the same pool.
 
     Emits one ``shard_sweep``-schema row per (point, rate) with
     ``bench="fleet_sweep"``/``engine="fleet"`` (``wall_clock_s`` is the
-    fleet matrix wall amortized per run), then a summary row with the
-    matrix walls, the measured speedup and the worst per-op latency
-    parity gap against the serial oracle.
+    fleet matrix wall amortized per run) carrying the executor's
+    per-phase timing (``structural_s`` on the point's first rate row,
+    ``temporal_s``/``lindley_s``/``finalize_s`` per rate, ``cache_hit``),
+    then a summary row with the matrix walls, the measured speedup and
+    the worst per-op latency parity gap against the serial oracle.
 
     ``backend`` picks the batched Lindley implementation ("numpy" by
     default: XLA's CPU scan lowering is ~20x slower than numpy's
     axis-1 accumulate on this tier; "jnp"/"pallas" are the device
     paths, parity-asserted in the kernel tests).
     """
-    from repro.core import SweepPoint, fleet_sweep, serial_sweep
+    from repro.core import (SweepPoint, serial_sweep_parallel,
+                            sweep_execute)
     if rates is None:
         rates = FLEET_RATES
     if shard_counts is None:
@@ -405,29 +411,36 @@ def fleet_sweep_bench(policies: list[str], n_ops: int = 30_000,
     n_runs = len(points) * len(rates)
 
     t0 = time.perf_counter()
-    fleet_res = fleet_sweep(points, backend=backend)
+    fleet_res, ftimings = sweep_execute(points, workers=workers,
+                                        backend=backend, cache=cache)
     t_fleet = time.perf_counter() - t0
 
     rows = []
-    for p, per_rate in zip(points, fleet_res):
-        for rate, res in zip(rates, per_rate):
+    for p, per_rate, ft in zip(points, fleet_res, ftimings):
+        for ri, (rate, res) in enumerate(zip(rates, per_rate)):
             row = _sweep_row(p.cfg, res, n_ops=n_ops, n_load=n_load,
                              rate=rate, dist=dist, wall=t_fleet / n_runs,
                              bench="fleet_sweep")
             row["engine"] = "fleet"
+            frag = ft.row(ri)
+            row["structural_s"] = frag["structural_s"]
+            row["temporal_s"] = frag["temporal_s"]
+            row["lindley_s"] = frag["lindley_s"]
+            row["finalize_s"] = frag["finalize_s"]
+            row["cache_hit"] = frag["cache_hit"]
             rows.append(row)
 
     summary = {
         "bench": "fleet_sweep", "engine": "summary", "dist": dist,
         "policies": list(policies), "shard_counts": list(shard_counts),
         "n_rates": len(rates), "runs": n_runs, "ops": n_ops,
-        "backend": backend,
+        "backend": backend, "workers": workers,
         "fleet_wall_s": round(t_fleet, 3),
         "wall_clock_s": round(t_fleet, 3),
     }
     if serial_baseline:
         t0 = time.perf_counter()
-        serial_res = serial_sweep(points)
+        serial_res = serial_sweep_parallel(points, workers=workers)
         t_serial = time.perf_counter() - t0
         dlat, stalls_eq = 0.0, True
         for pf, ps in zip(fleet_res, serial_res):
@@ -472,10 +485,23 @@ def make_serve_spec(*, duration_s: float = 4.0, population: int = 8_000,
         admission=AdmissionConfig() if admission else None)
 
 
+#: timing fragment for serve results that never went through the
+#: executor (direct ``serve`` calls outside the grid path)
+_NO_TIMING = {"structural_s": 0.0, "temporal_s": 0.0, "lindley_s": 0.0,
+              "finalize_s": 0.0, "cache_hit": False}
+
+
 def serve_row(cfg: LSMConfig, sr, *, factor: float, admission_on: bool,
               wall: float) -> dict:
-    """One serve_sweep-schema row from a ``ServeResult``."""
+    """One serve_sweep-schema row from a ``ServeResult``.
+
+    Phase timing rides in ``sr.timing`` (set by ``serve_grid``):
+    admission-off factors report the executor's per-phase split
+    (``structural_s`` on the grid's first factor, or 0.0 on a
+    structural-cache hit), admission-on factors run a serial engine
+    with no phase split, so the whole run lands in ``structural_s``."""
     stream = sr.stream
+    timing = sr.timing if sr.timing is not None else _NO_TIMING
     measured = (stream.tenant_ids >= 0) & ~np.isnan(sr.latency_full)
     get_lat = sr.latency_full[measured & (stream.op_types == OpKind.GET)]
     run_stalls = [d for i, d in sr.res.stall_events if i >= stream.n_load]
@@ -509,6 +535,11 @@ def serve_row(cfg: LSMConfig, sr, *, factor: float, admission_on: bool,
         "p999_get_ms": round(float(np.percentile(get_lat, 99.9)) * 1e3, 3)
         if get_lat.size else 0.0,
         "stall_total_s": round(sum(run_stalls), 4),
+        "structural_s": timing["structural_s"],
+        "temporal_s": timing["temporal_s"],
+        "lindley_s": timing["lindley_s"],
+        "finalize_s": timing["finalize_s"],
+        "cache_hit": timing["cache_hit"],
         "per_tenant": per_tenant,
         "wall_clock_s": round(wall, 3),
     }
@@ -517,14 +548,18 @@ def serve_row(cfg: LSMConfig, sr, *, factor: float, admission_on: bool,
 def serve_sweep_bench(policies: list[str], *, duration_s: float = 4.0,
                       population: int = 8_000,
                       factors: tuple[float, ...] = None,
-                      scale: int | None = None, seed: int = 7) -> list[dict]:
+                      scale: int | None = None, seed: int = 7,
+                      workers: int = 1, cache=None) -> list[dict]:
     """Goodput-vs-offered-load curves per policy, admission off and on.
 
-    The offered-load axis is swept with ``repro.serving.serve_grid``:
-    admission-off curves amortize ONE fleet structural replay per policy
-    (the stream is factor-invariant, only arrivals compress); admission-on
-    points run a fresh serial engine each (the admitted subset differs
-    per factor).  Off curves show the open-loop collapse past the knee —
+    The offered-load axis is swept with ``repro.serving.serve_grid``
+    through the sweep executor: admission-off curves amortize ONE fleet
+    structural replay per policy (the stream is factor-invariant, only
+    arrivals compress) — or skip it entirely on a structural-cache hit —
+    and admission-on points run a fresh serial engine each (the admitted
+    subset differs per factor), dispatched over the executor's fork pool
+    when ``workers > 1``.  Rows are byte-identical at every worker
+    count.  Off curves show the open-loop collapse past the knee —
     vlsm's narrow chains push the knee right — and on curves show the
     controller buying bounded high-priority tails with ``shed_frac`` > 0.
     """
@@ -543,7 +578,8 @@ def serve_sweep_bench(policies: list[str], *, duration_s: float = 4.0,
             cfg = get_policy(nm).default_config(scale=scale) \
                 .with_(n_shards=SERVE_SHARDS)
             t0 = time.perf_counter()
-            results = serve_grid(cfg, device, spec, factors)
+            results = serve_grid(cfg, device, spec, factors,
+                                 workers=workers, cache=cache)
             wall = (time.perf_counter() - t0) / len(factors)
             for f, sr in zip(factors, results):
                 rows.append(serve_row(cfg, sr, factor=f, admission_on=adm,
@@ -590,6 +626,10 @@ def main(argv=None):
                          f"(available: {', '.join(BENCHES)})")
     ap.add_argument("--seed", type=int, default=7,
                     help="base RNG seed for every workload (default 7)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="sweep-executor fork-pool size for fleet_sweep/"
+                         "serve_sweep (1 = in-process; rows are "
+                         "byte-identical at every worker count)")
     args = ap.parse_args(argv)
     seed = args.seed
     if args.bench == "all":
@@ -623,6 +663,9 @@ def main(argv=None):
     def cfg_for(name: str) -> LSMConfig:
         return get_policy(name).default_config(scale=scale)
 
+    # per-run executor accounting (feeds the perf_trajectory row below)
+    from repro.core import DEFAULT_CACHE, LEDGER
+    LEDGER.reset()
     rows = []
     # The uniform fillrandom runs are shared with chain_report (same cfg /
     # ops / dist / seed): one simulation feeds both rows.
@@ -700,7 +743,9 @@ def main(argv=None):
         fshards = (1, 4, 16) if args.quick else FLEET_SHARD_COUNTS
         frows = fleet_sweep_bench(chosen, n_shard, n_shard_pop,
                                   scale=scale, rates=frates,
-                                  shard_counts=fshards, seed=seed)
+                                  shard_counts=fshards, seed=seed,
+                                  workers=args.workers,
+                                  cache=DEFAULT_CACHE)
         rows.extend(frows)
         summ = frows[-1]
         print(f"db_bench.fleet_sweep: {summ}")
@@ -712,7 +757,9 @@ def main(argv=None):
         sdur = 1.5 if args.quick else 4.0
         spop = 3_000 if args.quick else 8_000
         srows = serve_sweep_bench(chosen, duration_s=sdur, population=spop,
-                                  factors=sfactors, scale=scale, seed=seed)
+                                  factors=sfactors, scale=scale, seed=seed,
+                                  workers=args.workers,
+                                  cache=DEFAULT_CACHE)
         rows.extend(srows)
         for r in srows:
             if r["load_factor"] == sfactors[-1]:
@@ -721,6 +768,23 @@ def main(argv=None):
                       f"goodput={r['goodput_ops_s']} "
                       f"shed={r['shed_frac']} "
                       f"p999_get_ms={r['p999_get_ms']}")
+    # perf_trajectory: one machine-readable summary of this run's
+    # executor activity — wall-clock vs the summed per-task compute (the
+    # serial single-process cost of the same tasks), so the speedup the
+    # pool + structural cache bought is diffable across commits.
+    if LEDGER.tasks:
+        row = {
+            "bench": "perf_trajectory", "workers": args.workers,
+            "tasks": LEDGER.tasks,
+            "cache_hits": LEDGER.cache_hits,
+            "cache_misses": LEDGER.cache_misses,
+            "executor_wall_s": round(LEDGER.wall_s, 3),
+            "serial_equiv_s": round(LEDGER.task_s, 3),
+            "speedup": round(LEDGER.speedup, 2),
+            "wall_clock_s": round(LEDGER.wall_s, 3),
+        }
+        rows.append(row)
+        print(f"db_bench.perf_trajectory: {row}")
     # under REPRO_PARANOID_CHECKS=1, every row must match the schema
     # repro-lint extracts from this module's dict literals (B6xx) —
     # emitter drift fails the smoke run, not just the linter

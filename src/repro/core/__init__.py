@@ -28,14 +28,22 @@ from .shard import ShardRouter, ShardedStore
 from .sim import SimResult, Simulator
 from .sst import SST
 from .stats import ChainRecord, FleetStats, Stats, TenantLedger
+from .sweeps import (DEFAULT_CACHE, LEDGER, ExecutorLedger, PointTiming,
+                     StructuralCache, parallel_map, point_key, run_point,
+                     serial_sweep_parallel, sweep_execute)
 from .types import (DeviceModel, LSMConfig, OpKind, Policy, RequestBatch,
                     ResultBatch)
+from .uids import UidNamespace
 
 __all__ = [
-    "ChainRecord", "CompactionPolicy", "DeviceModel", "FleetEngine",
-    "FleetStats", "Job", "LSMConfig", "LSMTree", "LevelIndex", "Memtable",
-    "OpKind", "PendingRun", "Policy", "RequestBatch", "ResultBatch", "SST",
-    "ShardRouter", "ShardedStore", "SimResult", "Simulator", "Stats",
-    "SweepPoint", "TenantLedger", "fleet_sweep", "get_policy", "policies",
-    "reset_uid_counters", "serial_sweep", "traffic_curve",
+    "ChainRecord", "CompactionPolicy", "DEFAULT_CACHE", "DeviceModel",
+    "ExecutorLedger", "FleetEngine", "FleetStats", "Job", "LEDGER",
+    "LSMConfig", "LSMTree", "LevelIndex", "Memtable", "OpKind",
+    "PendingRun", "PointTiming", "Policy", "RequestBatch", "ResultBatch",
+    "SST", "ShardRouter", "ShardedStore", "SimResult", "Simulator",
+    "Stats", "StructuralCache", "SweepPoint", "TenantLedger",
+    "UidNamespace", "fleet_sweep", "get_policy", "parallel_map",
+    "point_key", "policies", "reset_uid_counters", "run_point",
+    "serial_sweep", "serial_sweep_parallel", "sweep_execute",
+    "traffic_curve",
 ]

@@ -34,6 +34,7 @@ from .sst import SST, split_fixed, total_size, uid_allocator
 from .stats import ChainRecord, Stats
 from .types import (LSMConfig, OpKind, RequestBatch, ResultBatch,
                     seq_decode, seq_encode)
+from .uids import UidNamespace
 
 _job_ids = itertools.count()
 # Chain ids are module-global (not per-tree): a Simulator shares one Stats
@@ -85,7 +86,8 @@ class LSMTree:
     """
 
     def __init__(self, cfg: LSMConfig, stats: Stats | None = None,
-                 shard_id: int = 0, region_id: int = 0):
+                 shard_id: int = 0, region_id: int = 0,
+                 uids: UidNamespace | None = None):
         self.cfg = cfg
         # The strategy object owning every compaction decision; the tree
         # itself is a policy-agnostic mechanism engine.
@@ -113,13 +115,30 @@ class LSMTree:
         # and therefore bloom behaviour — is independent of how an engine
         # interleaves trees in time (the heap DES and the batched fleet
         # engine replay the same per-tree structural order, not the same
-        # global order).
+        # global order).  An explicit ``uids`` namespace replaces the
+        # process-global counters with engine-private ones starting at
+        # the same (reset) state — byte-identical streams, immune to
+        # allocations by any OTHER engine alive in the process.
+        self._uids = uids
         slot = (shard_id << 12) | region_id
-        self._sst_uids = None if slot == 0 else itertools.count(slot << 40)
+        if slot != 0:
+            self._sst_uids = itertools.count(slot << 40)
+        else:
+            self._sst_uids = uids.sst_ids if uids is not None else None
         # Lazy flat concatenation of each sorted level's keys/seqs (the
         # vectorized GET path probes a whole level with ONE searchsorted);
         # invalidated by the LevelIndex per-level version counters.
         self._flat: dict[int, tuple[int, np.ndarray, np.ndarray]] = {}
+
+    def _next_job_uid(self) -> int:
+        """Job uid from the tree's namespace, or the module counter."""
+        return next(self._uids.job_ids if self._uids is not None
+                    else _job_ids)
+
+    def _next_chain_id(self) -> int:
+        """Chain id from the tree's namespace, or the module counter."""
+        return next(self._uids.chain_ids if self._uids is not None
+                    else _chain_ids)
 
     # --------------------------------------------------- typed entry point
     def apply_batch(self, batch: RequestBatch) -> ResultBatch:
@@ -223,7 +242,8 @@ class LSMTree:
         # back-pressure, not chain lineage, so parent_job stays None.
         if sst.n == 0:
             job = Job("flush", -1, 0, 0, 0, 0, deps=blocking,
-                      chain_id=next(_chain_ids), shard=self.shard_id)
+                      uid=self._next_job_uid(),
+                      chain_id=self._next_chain_id(), shard=self.shard_id)
             self.pending_jobs.append(job)
             return job, chain_jobs
         self.levels[0].append(sst)
@@ -232,7 +252,8 @@ class LSMTree:
         self.stats.ssts_created += 1
         self.stats.manifest_flushes += 1
         job = Job("flush", -1, 0, sst.size, 0, 1, deps=blocking,
-                  chain_id=next(_chain_ids), shard=self.shard_id)
+                  uid=self._next_job_uid(),
+                  chain_id=self._next_chain_id(), shard=self.shard_id)
         self.pending_jobs.append(job)
         return job, chain_jobs
 
@@ -266,7 +287,7 @@ class LSMTree:
         ledger a :class:`ChainRecord` (width = head fan-in, length =
         distinct levels traversed, per-stage bytes).  The chain *head* is
         the final job of the pass — the one that relieves the trigger."""
-        cid = next(_chain_ids)
+        cid = self._next_chain_id()
         prev, self._active_chain = self._active_chain, cid
         try:
             jobs, stage_bytes = self._compact_from(level)
@@ -448,6 +469,7 @@ class LSMTree:
         self.stats.manifest_flushes += 1
         self.stats.note_compaction(level, read_b + write_b)
         job = Job("compact", level, read_b, write_b, n_in, n_out, deps=deps,
+                  uid=self._next_job_uid(),
                   chain_id=self._active_chain,
                   parent_job=deps[0] if deps else None, shard=self.shard_id)
         self.pending_jobs.append(job)

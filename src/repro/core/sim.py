@@ -54,6 +54,7 @@ from .policies import get_policy
 from .shard import ShardRouter
 from .stats import FleetStats, Stats
 from .types import DeviceModel, LSMConfig, OpKind, RequestBatch
+from .uids import UidNamespace
 
 PUT_SERVICE = 1.5e-6      # CPU service per put/delete (s); ~0.7 Mops/s queue
 GET_CPU = 2.0e-6          # CPU service per get before device reads
@@ -314,8 +315,11 @@ class Simulator:
     """
 
     def __init__(self, cfg: LSMConfig, device: DeviceModel | None = None,
-                 n_regions: int = 1):
+                 n_regions: int = 1, uids: UidNamespace | None = None):
         self.cfg = cfg
+        # Engine-private uid streams (None = legacy module-global counters
+        # + reset_uid_counters idiom); see repro.core.uids.
+        self.uids = uids
         # Stall gates (write-stop occupancy, write-buffer allowance) are the
         # compaction policy's call, not an enum branch.
         self.policy = get_policy(cfg.policy)
@@ -339,7 +343,7 @@ class Simulator:
             if self.n_shards == 1 else FleetStats(self.shard_stats)
         # Flat shard-major tree list: trees[shard * n_regions + region].
         self.trees = [LSMTree(cfg, self.shard_stats[s], shard_id=s,
-                              region_id=r)
+                              region_id=r, uids=uids)
                       for s in range(self.n_shards)
                       for r in range(n_regions)]
         # Dedicated flush slot + shared compaction slots (RocksDB's

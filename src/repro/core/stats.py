@@ -394,9 +394,19 @@ class FleetStats:
     # and vanish silently, so refuse them like attribute writes.
     _MUTATORS = frozenset({"note_compaction", "record_chain", "merge_from"})
 
+    def __reduce__(self):
+        # Explicit pickle protocol: the default path probes
+        # ``__getstate__`` via getattr, which lands in __getattr__ →
+        # merged() → self.shards → __getattr__ … and recurses forever.
+        return (FleetStats, (self.shards,))
+
     def __getattr__(self, name):
         # every Stats read (property, counter, or method) via the merged
-        # snapshot; AttributeError propagates naturally for unknown names
+        # snapshot; AttributeError propagates naturally for unknown names.
+        # Dunder probes (pickle/copy protocol discovery, IPython reprs)
+        # must fail fast instead of delegating into merged().
+        if name.startswith("__") and name.endswith("__"):
+            raise AttributeError(name)
         if name in FleetStats._MUTATORS:
             raise AttributeError(
                 f"Stats.{name} mutates its receiver; call it on the "

@@ -1,0 +1,52 @@
+"""Explicit uid namespaces: per-engine SST/job/chain id streams.
+
+Three module-global ``itertools.count`` streams historically numbered
+every SST, job and chain in the process (``sst._ids``, ``lsm._job_ids``,
+``lsm._chain_ids``).  Those uids are not cosmetic: SST uids seed the
+bloom false-positive hash, so two engines replaying the same op stream
+are byte-identical only when their uid streams match.  The sweep
+drivers handled that with ``reset_uid_counters()`` before every engine
+construction — correct for one engine at a time, but impossible to keep
+correct once engines coexist (a cached structural replay held alive
+next to a fresh engine, or sweep points running in parallel workers):
+whoever allocates next perturbs everyone else's stream.
+
+:class:`UidNamespace` makes the stream an explicit constructor argument:
+``Simulator(cfg, device, uids=UidNamespace())`` draws every slot-0 SST
+uid, job uid and chain id from ITS OWN counters, starting from zero —
+exactly the state ``reset_uid_counters()`` rewinds the module counters
+to, so a fresh namespace is byte-identical to the reset idiom while
+being immune to any other engine's allocations.  Non-zero fleet slots
+keep their per-tree disjoint counters (``slot << 40`` bases) either
+way; they were never shared.
+
+``reset_uid_counters`` (in :mod:`repro.core.fleet`) remains for callers
+that construct engines without a namespace.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+
+class UidNamespace:
+    """One engine's private uid streams (SST / job / chain counters).
+
+    A fresh namespace starts all three streams at zero — the same state
+    ``reset_uid_counters()`` leaves the module-global counters in, which
+    is what makes namespace-built engines byte-identical to the legacy
+    reset-then-construct idiom (pinned in ``tests/test_sweeps.py``).
+    """
+
+    __slots__ = ("sst_ids", "job_ids", "chain_ids")
+
+    def __init__(self) -> None:
+        self.sst_ids = itertools.count()
+        self.job_ids = itertools.count()
+        self.chain_ids = itertools.count()
+
+    def __reduce__(self):
+        # itertools.count pickles fine, but a namespace crossing a
+        # process boundary (fork-pool task args) should start fresh:
+        # the receiving engine replays from op 0 either way.
+        return (UidNamespace, ())

@@ -255,6 +255,10 @@ class ServeResult:
     latency_full: np.ndarray
     tenants: list[TenantLedger]
     duration_s: float
+    # executor phase-timing fragment for this run's bench row
+    # (structural_s / temporal_s / lindley_s / finalize_s / cache_hit);
+    # None when the caller didn't time the run
+    timing: dict | None = None
 
     @property
     def offered_ops(self) -> int:
@@ -307,9 +311,15 @@ def _ledger(ten: TenantSpec, mask: np.ndarray, verdicts: np.ndarray,
         slo_violations=int(np.count_nonzero(lat > slo_s)))
 
 
-def _assemble(sim, spec: TrafficSpec, stream: TrafficStream,
+def _assemble(cfg, spec: TrafficSpec, stream: TrafficStream,
               verdicts: np.ndarray, shard_ids: np.ndarray, res,
-              record_stats: bool) -> ServeResult:
+              stats_sink=None, timing: dict | None = None) -> ServeResult:
+    """Per-tenant accounting over one engine result.
+
+    ``stats_sink`` (an engine, or None) receives the per-shard tenant
+    ledger splits — None for grid passes, whose engine may live in the
+    executor's structural cache rather than in the caller's hands.
+    """
     n = int(stream.op_types.shape[0])
     latency_full = np.full(n, np.nan)
     latency_full[verdicts == ADMIT] = res.latency
@@ -318,13 +328,13 @@ def _assemble(sim, spec: TrafficSpec, stream: TrafficStream,
         slo_s = ten.slo_ms * 1e-3
         t_mask = stream.tenant_ids == ti
         ledgers.append(_ledger(ten, t_mask, verdicts, latency_full, slo_s))
-        if record_stats:
-            for s in range(sim.n_shards):
+        if stats_sink is not None:
+            for s in range(stats_sink.n_shards):
                 m = t_mask & (shard_ids == s)
                 if not m.any():
                     continue
                 led = _ledger(ten, m, verdicts, latency_full, slo_s)
-                st = sim.shard_stats[s]
+                st = stats_sink.shard_stats[s]
                 if ten.name in st.tenants:
                     st.tenants[ten.name].merge_from(led)
                 else:
@@ -333,7 +343,7 @@ def _assemble(sim, spec: TrafficSpec, stream: TrafficStream,
                 st.ops_shed += led.ops_shed
                 st.ops_throttled += led.ops_throttled
                 st.slo_violations += led.slo_violations
-    if sim.cfg.paranoid_checks:
+    if cfg.paranoid_checks:
         # conservation: every offered op got exactly one verdict
         for led in ledgers:
             assert led.ops_offered == (led.ops_admitted + led.ops_shed
@@ -347,7 +357,7 @@ def _assemble(sim, spec: TrafficSpec, stream: TrafficStream,
             "preload ops must bypass admission"
     return ServeResult(res=res, stream=stream, verdicts=verdicts,
                        latency_full=latency_full, tenants=ledgers,
-                       duration_s=stream.duration_s)
+                       duration_s=stream.duration_s, timing=timing)
 
 
 def serve(sim, spec: TrafficSpec, *, load_factor: float = 1.0,
@@ -373,40 +383,73 @@ def serve(sim, spec: TrafficSpec, *, load_factor: float = 1.0,
         keep = verdicts == ADMIT
         res = sim.run(stream.op_types[keep], stream.keys[keep],
                       stream.arrivals[keep], stream.scan_lens[keep])
-    return _assemble(sim, spec, stream, verdicts, shard_ids, res,
-                     record_stats)
+    return _assemble(sim.cfg, spec, stream, verdicts, shard_ids, res,
+                     stats_sink=sim if record_stats else None)
+
+
+def _admitted_point(task) -> ServeResult:
+    """One admission-on grid point: a fresh namespace-built serial
+    engine, timed end-to-end.  Module-level (fork-pool pickling
+    contract); the serial engine has no phase split, so the whole run
+    lands in ``structural_s`` and the pass phases report 0.0."""
+    import time
+    from repro.core.sim import Simulator
+    from repro.core.uids import UidNamespace
+    cfg, device, spec, factor = task
+    t0 = time.perf_counter()
+    sr = serve(Simulator(cfg, device, uids=UidNamespace()), spec,
+               load_factor=factor)
+    wall = time.perf_counter() - t0
+    sr.timing = {"structural_s": round(wall, 6), "temporal_s": 0.0,
+                 "lindley_s": 0.0, "finalize_s": 0.0, "cache_hit": False}
+    return sr
 
 
 def serve_grid(cfg, device, spec: TrafficSpec,
                load_factors: tuple[float, ...], *,
-               backend: str = "numpy") -> list[ServeResult]:
+               backend: str = "numpy", workers: int = 1,
+               cache=None) -> list[ServeResult]:
     """Sweep an offered-load axis: one :class:`ServeResult` per factor.
 
-    Admission-off curves share ONE fleet structural replay (the op
-    stream is factor-invariant; only arrivals compress), one cheap
-    temporal pass per factor.  With admission on, each factor's admitted
-    subset differs, so each point runs a fresh serial engine.  Grid
-    passes share engine state, so per-pass tenant ledgers ride the
-    ``ServeResult`` only (``record_stats=False``) — single ``serve``
-    calls are the path that lands admission counters in ``Stats``.
+    Admission-off curves go through the sweep executor
+    (:func:`repro.core.sweeps.run_point`): ONE structural replay — or a
+    :class:`~repro.core.sweeps.StructuralCache` hit skipping it — then a
+    cheap temporal pass per factor (the op stream is factor-invariant;
+    only arrivals compress).  With admission on, each factor's admitted
+    subset differs, so each point runs a fresh serial engine — those
+    points are independent and dispatch over the executor's fork pool
+    when ``workers > 1``.  Engines are namespace-built either way, so
+    results are byte-identical at every worker count.  Grid passes keep
+    per-pass tenant ledgers on the ``ServeResult`` only — single
+    ``serve`` calls are the path that lands admission counters in
+    ``Stats``.  Every result carries its phase-timing fragment in
+    ``.timing``.
     """
-    from repro.core.fleet import FleetEngine, reset_uid_counters, \
-        traffic_curve
-    from repro.core.sim import Simulator
+    import time
+    from repro.core.fleet import SweepPoint
+    from repro.core.shard import ShardRouter
+    from repro.core.sweeps import (LEDGER, PointTiming, parallel_map,
+                                   run_point)
+    t_grid = time.perf_counter()
     if spec.admission is not None:
-        out = []
-        for f in load_factors:
-            reset_uid_counters()
-            out.append(serve(Simulator(cfg, device), spec, load_factor=f))
+        tasks = [(cfg, device, spec, f) for f in load_factors]
+        out = parallel_map(_admitted_point, tasks, workers=workers)
+        timings = [PointTiming(label=f"{cfg.policy}/adm/{f}",
+                               cache_hit=False,
+                               structural_s=sr.timing["structural_s"])
+                   for f, sr in zip(load_factors, out)]
+        LEDGER.add(wall_s=time.perf_counter() - t_grid, timings=timings)
         return out
     streams = [materialize(spec, load_factor=f) for f in load_factors]
     base = streams[0]
-    reset_uid_counters()
-    eng = FleetEngine(cfg, device)
-    shard_ids = eng.router.shard_of(base.keys)
-    results = traffic_curve(eng, base.op_types, base.keys, base.scan_lens,
-                            [s.arrivals for s in streams], backend=backend)
+    point = SweepPoint(label=f"{cfg.policy}/off", cfg=cfg, device=device,
+                       op_types=base.op_types, keys=base.keys,
+                       scan_lens=base.scan_lens,
+                       arrivals_grid=[s.arrivals for s in streams])
+    results, timing = run_point(point, backend=backend, cache=cache)
+    LEDGER.add(wall_s=time.perf_counter() - t_grid, timings=[timing])
+    shard_ids = ShardRouter.from_config(cfg).shard_of(base.keys)
     verdicts = np.zeros(base.op_types.shape[0], np.uint8)
-    return [_assemble(eng, spec, stream, verdicts, shard_ids, res,
-                      record_stats=False)
-            for stream, res in zip(streams, results)]
+    return [_assemble(cfg, spec, stream, verdicts, shard_ids, res,
+                      timing=timing.row(i))
+            for i, (stream, res) in enumerate(zip(streams, results))]

@@ -20,21 +20,29 @@ from repro.bench_kv import db_bench
 from repro.core import reset_uid_counters
 
 # wall-clock-derived fields: genuinely nondeterministic, excluded from
-# the byte-compare (everything else must reproduce)
-VOLATILE = {"wall_clock_s", "fleet_wall_s", "serial_wall_s", "speedup"}
+# the byte-compare (everything else must reproduce).  The executor's
+# phase timings and cache/ledger counters join them: a repeated
+# in-process run may HIT the structural cache (bit-identical results,
+# but cache_hit flips and structural_s collapses to 0.0).
+VOLATILE = {"wall_clock_s", "fleet_wall_s", "serial_wall_s", "speedup",
+            "structural_s", "temporal_s", "lindley_s", "finalize_s",
+            "cache_hit", "executor_wall_s", "serial_equiv_s",
+            "cache_hits", "cache_misses", "tasks", "workers"}
 
 
 def _strip(row: dict) -> dict:
     return {k: v for k, v in row.items() if k not in VOLATILE}
 
 
-def _run(bench: str, seed: int, tmp_path, tag: str) -> list[dict]:
+def _run(bench: str, seed: int, tmp_path, tag: str,
+         workers: int = 1) -> list[dict]:
     out = tmp_path / f"{bench}_{tag}.json"
     # uid counters seed the bloom filters; rewind so repeated in-process
     # runs start from the fresh-interpreter state the CLI sees
     reset_uid_counters()
     db_bench.main(["--bench", bench, "--quick", "--policy", "vlsm",
-                   "--seed", str(seed), "--json", str(out)])
+                   "--seed", str(seed), "--json", str(out),
+                   "--workers", str(workers)])
     return [_strip(r) for r in json.loads(out.read_text())]
 
 
@@ -56,3 +64,20 @@ def test_seed_threads_through_family(bench, tmp_path, monkeypatch, capsys):
     assert base != other, \
         f"{bench}: --seed is not threaded through (rows identical " \
         f"across seeds)"
+
+
+@pytest.mark.parametrize("bench", ("fleet_sweep", "serve_sweep"))
+def test_executor_workers_row_parity(bench, tmp_path, monkeypatch, capsys):
+    """Executor-driven families: the fork pool must not perturb a single
+    row — workers=2 reproduces the workers=1 rows byte-identically
+    (modulo the volatile timing fields)."""
+    monkeypatch.setattr(db_bench, "FLEET_RATES_QUICK", (2_000.0, 6_000.0))
+    monkeypatch.setattr(db_bench, "SERVE_FACTORS_QUICK", (1.0, 3.0))
+
+    serial = _run(bench, 7, tmp_path, "w1", workers=1)
+    pooled = _run(bench, 7, tmp_path, "w2", workers=2)
+    capsys.readouterr()
+
+    assert serial, f"{bench} emitted no rows"
+    assert serial == pooled, \
+        f"{bench}: workers=2 rows diverge from workers=1"
